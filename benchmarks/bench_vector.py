@@ -1,0 +1,65 @@
+"""Vectorized-engine throughput (the TPU adaptation's §Perf microbench).
+
+Measures messages/second through the jitted batched receiver step on the
+host backend at several key counts — the CPU analogue of the paper's
+per-machine Mops/s table — and kernel-vs-oracle agreement counts.
+"""
+
+from __future__ import annotations
+
+import json
+import random
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import vector
+from repro.kernels.paxos_apply import ops
+
+
+def random_tables(n, seed=0):
+    rng = np.random.default_rng(seed)
+    z = lambda lo, hi: jnp.asarray(rng.integers(lo, hi, n), jnp.int32)
+    kv = vector.KVTable(
+        state=z(0, 3), log_no=z(0, 4), last_log=z(0, 4),
+        prop_v=z(0, 6), prop_m=z(0, 5), acc_v=z(0, 6), acc_m=z(0, 5),
+        acc_val=z(0, 100), acc_base_v=z(0, 3), acc_base_m=z(0, 5),
+        rmw_cnt=z(1, 5), rmw_sess=z(0, 40), value=z(0, 100),
+        base_v=z(0, 3), base_m=z(0, 5), val_log=z(0, 4),
+        last_rmw_cnt=z(1, 5), last_rmw_sess=z(0, 40))
+    msg = vector.MsgBatch(
+        kind=z(0, 4), ts_v=z(0, 7), ts_m=z(0, 5), log_no=z(0, 5),
+        rmw_cnt=z(1, 5), rmw_sess=z(0, 40), value=z(0, 100),
+        base_v=z(0, 3), base_m=z(0, 5), val_log=z(0, 5),
+        has_value=z(0, 2))
+    registered = jnp.asarray(rng.integers(0, 4, 40), jnp.int32)
+    return kv, msg, registered
+
+
+def bench(n_keys: int, iters: int = 30, use_kernel: bool = False):
+    kv, msg, reg = random_tables(n_keys)
+    step = jax.jit(lambda kv, msg, reg: ops.replica_step(
+        kv, msg, reg, use_kernel=use_kernel))
+    out = step(kv, msg, reg)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(iters):
+        kv2, rep, reg = step(kv, msg, reg)
+        kv = kv2
+    jax.block_until_ready(kv)
+    dt = (time.time() - t0) / iters
+    return {"n_keys": n_keys, "impl": "pallas" if use_kernel else "jnp",
+            "msgs_per_s": round(n_keys / dt), "us_per_batch": round(dt * 1e6)}
+
+
+def main():
+    rows = [bench(n) for n in (4096, 65_536, 1_048_576)]
+    rows.append(bench(65_536, iters=3, use_kernel=True))
+    print(json.dumps(rows, indent=1))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Benchmark runner: `PYTHONPATH=src python -m benchmarks.run`.
+
+One benchmark per paper table/claim:
+  * bench_protocol — CP vs All-aboard vs ABD (msgs/op, fast-path rates,
+    rare replies, availability under crash)      [paper §9-§11]
+  * bench_vector   — vectorized-engine throughput (the TPU adaptation)
+  * roofline       — re-derives the 34-cell roofline table from the
+    dry-run artifacts if present (run scripts_run_dryruns.sh first)
+"""
+
+from __future__ import annotations
+
+import glob
+import sys
+import time
+
+
+def main():
+    t0 = time.time()
+    from benchmarks import bench_protocol, bench_vector
+
+    print("=" * 72)
+    print("bench_protocol — extended-CP / All-aboard / ABD (paper §9-§11)")
+    print("=" * 72)
+    bench_protocol.main()
+
+    print("=" * 72)
+    print("bench_vector — vectorized SIMD engine throughput")
+    print("=" * 72)
+    bench_vector.main()
+
+    print("=" * 72)
+    print("roofline — from dry-run artifacts (artifacts/dryrun_*.json)")
+    print("=" * 72)
+    if glob.glob("artifacts/dryrun_*_single.json"):
+        from repro.launch import roofline
+        sys.argv = ["roofline"]
+        roofline.main()
+    else:
+        print("no artifacts found; run scripts_run_dryruns.sh first")
+
+    print(f"\nall benchmarks done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""End-to-end driver: train a ~100M-param LM with the Paxos control plane.
+
+Demonstrates the full integration the paper's technique enables:
+
+  * data shards are FAA-leased through the replicated register
+    (exactly-once across restarts),
+  * checkpoints are CAS-committed (the filesystem is never the source of
+    truth),
+  * a *mid-run crash + restart* of the trainer: the second run resumes
+    from the committed step and continues the lease sequence — no batch
+    trained twice, none skipped, loss keeps descending,
+  * a registry replica is crashed during training: zero stall.
+
+    PYTHONPATH=src python examples/train_fault_tolerant.py
+"""
+
+import argparse
+import shutil
+
+import jax
+
+from repro.coord.registry import PaxosRegistry
+from repro.data.pipeline import DataConfig
+from repro.models.config import ModelConfig
+from repro.models.registry import build_model
+from repro.optim import adamw
+from repro.train.loop import TrainConfig, train
+
+CKPT = "/tmp/repro_ckpt_example"
+
+
+def make_model(full: bool):
+    if full:
+        # ~100M params: 8 layers, d=512, 16k vocab (a few hundred steps;
+        # sized for a real accelerator — slow on 1 CPU core)
+        cfg = ModelConfig(name="demo-100m", family="dense", n_layers=8,
+                          d_model=512, n_heads=8, n_kv_heads=8, d_ff=2048,
+                          vocab=16384)
+    else:
+        cfg = ModelConfig(name="demo-16m", family="dense", n_layers=4,
+                          d_model=256, n_heads=4, n_kv_heads=4, d_ff=1024,
+                          vocab=8192)
+    print(f"model: {cfg.n_params() / 1e6:.1f}M params")
+    return build_model(cfg), cfg
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="~100M params, 300 steps (accelerator-sized)")
+    args = ap.parse_args()
+    half = 150 if args.full else 20
+    total = 2 * half
+    every = 50 if args.full else 10
+
+    shutil.rmtree(CKPT, ignore_errors=True)
+    registry = PaxosRegistry(n_machines=5, all_aboard=True)
+    model, mcfg = make_model(args.full)
+    data = DataConfig(vocab=mcfg.vocab, seq_len=128, batch=8)
+    opt = adamw.AdamWConfig(lr=1e-3, total_steps=total, warmup_steps=10)
+
+    # ---- phase 1: train to the midpoint, checkpointing ---------------------
+    t1 = TrainConfig(run="demo", steps=half, ckpt_every=every, ckpt_dir=CKPT,
+                     log_every=every)
+    out1 = train(model, data, t1, opt, registry,
+                 hooks={"on_log": lambda m: print("  ", m),
+                        "on_ckpt": lambda s, won: print(
+                            f"   ckpt step {s} committed={won}")})
+    print(f"phase 1 done (wall {out1['wall_s']:.1f}s); "
+          f"committed step = {registry.latest_checkpoint('demo')}")
+
+    # ---- crash a registry replica: control plane must not stall ----------
+    registry.crash(4)
+    print("crashed registry replica 4 (4/5 alive, majority intact)")
+
+    # ---- phase 2: simulate trainer crash + restart ------------------------
+    # a NEW loop instance resumes from the committed checkpoint; shard
+    # leases continue from the registry cursor (exactly-once data)
+    t2 = TrainConfig(run="demo", steps=total, ckpt_every=every,
+                     ckpt_dir=CKPT, log_every=every)
+    out2 = train(model, data, t2, opt, registry,
+                 hooks={"on_log": lambda m: print("  ", m)})
+    assert out2["start_step"] == half, out2["start_step"]
+    print(f"resumed from step {out2['start_step']}, "
+          f"final committed = {registry.latest_checkpoint('demo')}")
+
+    losses = [h["loss"] for h in out1["history"] + out2["history"]]
+    print("loss trajectory:", " ".join(f"{l:.3f}" for l in losses))
+    assert losses[-1] < losses[0], "loss must descend across the restart"
+
+    # straggler-mitigation grant: only one of two "racing" executors wins
+    a = registry.claim_backup("demo", step=total + 1, node=0)
+    b = registry.claim_backup("demo", step=total + 1, node=1)
+    assert a and not b
+    print("straggler backup grant: node0 won, node1 discarded — "
+          "exactly-once update")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,250 @@
+"""Deterministic discrete-event simulator for the asynchronous network model.
+
+The paper assumes machines can crash (crash-stop) and that processing and
+networking delays are unbounded (§1).  This module provides exactly that
+environment, deterministically seeded, so safety properties can be
+property-tested under adversarial schedules:
+
+* per-message random delay (optionally heavy-tailed),
+* message drops, duplication and reordering,
+* crash-stop failures and (for elastic-membership experiments) rejoins with
+  cleared volatile state,
+* network partitions.
+
+``Cluster`` wires :class:`repro.core.node.Machine` replicas onto the
+simulated network and exposes a small synchronous driver API used by the
+tests, the benchmarks and the :mod:`repro.coord` facade.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import random
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from .node import Completion, Machine, ProtocolConfig, ReqKind, Request
+from .types import RmwOp
+
+
+@dataclasses.dataclass
+class NetConfig:
+    """Fault-injection knobs for the simulated network."""
+
+    seed: int = 0
+    min_delay: float = 1.0
+    max_delay: float = 3.0
+    drop_prob: float = 0.0
+    dup_prob: float = 0.0
+    # With probability heavy_tail_prob a message is delayed by an extra
+    # uniform(0, heavy_tail_extra) — models stragglers / unbounded delays.
+    heavy_tail_prob: float = 0.0
+    heavy_tail_extra: float = 50.0
+
+
+class Network:
+    """Event-heap message transport with drops/dups/reorder/partitions."""
+
+    def __init__(self, cfg: NetConfig, n: int):
+        self.cfg = cfg
+        self.rng = random.Random(cfg.seed)
+        self.n = n
+        self.heap: List[Tuple[float, int, int, object]] = []
+        self._seq = itertools.count()
+        self.now = 0.0
+        self.partitioned: set = set()          # frozenset pairs that can't talk
+        self.stats = {"sent": 0, "dropped": 0, "duplicated": 0, "delivered": 0}
+
+    def partition(self, group_a: Sequence[int], group_b: Sequence[int]) -> None:
+        for a in group_a:
+            for b in group_b:
+                self.partitioned.add(frozenset((a, b)))
+
+    def heal(self) -> None:
+        self.partitioned.clear()
+
+    def send(self, src: int, dst: int, payload: object) -> None:
+        self.stats["sent"] += 1
+        if frozenset((src, dst)) in self.partitioned:
+            self.stats["dropped"] += 1
+            return
+        if self.rng.random() < self.cfg.drop_prob:
+            self.stats["dropped"] += 1
+            return
+        copies = 2 if self.rng.random() < self.cfg.dup_prob else 1
+        if copies == 2:
+            self.stats["duplicated"] += 1
+        for _ in range(copies):
+            delay = self.rng.uniform(self.cfg.min_delay, self.cfg.max_delay)
+            if self.rng.random() < self.cfg.heavy_tail_prob:
+                delay += self.rng.uniform(0.0, self.cfg.heavy_tail_extra)
+            heapq.heappush(self.heap,
+                           (self.now + delay, next(self._seq), dst, payload))
+
+    def deliver_due(self, until: float,
+                    machines: Sequence[Machine]) -> int:
+        """Deliver every message with arrival time <= until."""
+        delivered = 0
+        while self.heap and self.heap[0][0] <= until:
+            t, _, dst, payload = heapq.heappop(self.heap)
+            machines[dst].deliver(payload)
+            delivered += 1
+        self.stats["delivered"] += delivered
+        self.now = until
+        return delivered
+
+    def pending(self) -> int:
+        return len(self.heap)
+
+
+class Cluster:
+    """A replicated RMW-register deployment on the simulated network.
+
+    Drives the worker loop of every machine in lockstep rounds: each round
+    advances simulated time by one tick, delivers due messages, then steps
+    every live machine once (§3.1.3 while(true) iteration).
+    """
+
+    def __init__(self, cfg: Optional[ProtocolConfig] = None,
+                 net: Optional[NetConfig] = None):
+        self.cfg = cfg or ProtocolConfig()
+        self.netcfg = net or NetConfig()
+        self.network = Network(self.netcfg, self.cfg.n_machines)
+        self.machines: List[Machine] = [
+            Machine(mid, self.cfg, self.network.send,
+                    lambda: self.network.now)
+            for mid in range(self.cfg.n_machines)
+        ]
+        self.completions: List[Tuple[int, int, Completion]] = []  # (mid, sess, c)
+        # global-time intervals for the linearizability checker:
+        # (key, kind, invoke_t, complete_t, value_read, value_written, rmw_id)
+        self.history: List[dict] = []
+        self._inflight: Dict[int, dict] = {}
+        self._tag = itertools.count(1)
+        self.rounds = 0
+
+    # -- client API ----------------------------------------------------------
+
+    def submit(self, mid: int, sess: int, req: Request) -> int:
+        """Enqueue a client request; returns the tag for history matching."""
+        tag = next(self._tag)
+        req.tag = tag
+        self._inflight[tag] = {
+            "key": req.key, "kind": req.kind, "mid": mid, "sess": sess,
+            "invoke": self.network.now, "op": req.op,
+            "arg1": req.arg1, "arg2": req.arg2, "wval": req.value,
+        }
+        self.machines[mid].submit(sess, req)
+        return tag
+
+    def rmw(self, mid: int, sess: int, key: int, op: RmwOp = RmwOp.FAA,
+            arg1: int = 1, arg2: int = 0) -> int:
+        return self.submit(mid, sess, Request(ReqKind.RMW, key, op=op,
+                                              arg1=arg1, arg2=arg2))
+
+    def write(self, mid: int, sess: int, key: int, value: int) -> int:
+        return self.submit(mid, sess, Request(ReqKind.WRITE, key, value=value))
+
+    def read(self, mid: int, sess: int, key: int) -> int:
+        return self.submit(mid, sess, Request(ReqKind.READ, key))
+
+    def crash(self, mid: int) -> None:
+        self.machines[mid].crash()
+
+    def restart(self, mid: int) -> None:
+        """Crash-recover from stable storage.
+
+        Acceptor state (KV-pair metadata incl. promises, the rmw-id
+        registry, the write clock) is modeled as persistent — losing it
+        would break quorum intersection, which is why real deployments
+        either persist it or rejoin as a *new* member.  Volatile state
+        (sessions, local entries, in-flight tallies, inbox) is lost: those
+        clients time out.  The new incarnation's rmw-ids must not collide
+        with the old one's (the registry would otherwise suppress them as
+        already committed).
+        """
+        old = self.machines[mid]
+        fresh = Machine(mid, self.cfg, self.network.send,
+                        lambda: self.network.now,
+                        incarnation=old.incarnation + 1)
+        fresh.kvs = old.kvs
+        fresh.registry = old.registry
+        fresh.write_clock = old.write_clock
+        fresh.commit_log = old.commit_log
+        fresh.write_log = old.write_log
+        self.machines[mid] = fresh
+
+    # -- driving -------------------------------------------------------------
+
+    def step(self, ticks: int = 1) -> None:
+        for _ in range(ticks):
+            self.rounds += 1
+            self.network.deliver_due(self.network.now + 1.0, self.machines)
+            for m in self.machines:
+                m.step()
+                for sess, comp in m.completions:
+                    self._complete(m.mid, sess, comp)
+                m.completions.clear()
+
+    def _complete(self, mid: int, sess: int, comp: Completion) -> None:
+        self.completions.append((mid, sess, comp))
+        info = self._inflight.pop(comp.tag, None)
+        if info is not None:
+            info.update(complete=self.network.now, value=comp.value,
+                        carstamp=comp.carstamp, rmw_id=comp.rmw_id)
+            self.history.append(info)
+
+    def run_until_quiet(self, max_ticks: int = 20_000,
+                        extra: int = 50) -> bool:
+        """Step until no session has in-flight work; returns success."""
+        quiet = 0
+        for _ in range(max_ticks):
+            self.step()
+            busy = any(not m.session_idle(s)
+                       for m in self.machines if m.alive
+                       for s in range(self.cfg.sessions_per_machine))
+            if not busy and not self.network.pending():
+                quiet += 1
+                if quiet >= extra:
+                    return True
+            else:
+                quiet = 0
+        return False
+
+    # -- aggregate stats -----------------------------------------------------
+
+    def stats(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for m in self.machines:
+            for k, v in m.stats.items():
+                out[k] = out.get(k, 0) + v
+        out.update({f"net_{k}": v for k, v in self.network.stats.items()})
+        return out
+
+
+def workload(cluster: Cluster, *, n_ops: int, keys: int,
+             rmw_frac: float = 1.0, write_frac: float = 0.0,
+             seed: int = 0, op: RmwOp = RmwOp.FAA,
+             cas_mode: bool = False) -> List[int]:
+    """Feed a mixed open-loop workload round-robin over machines/sessions."""
+    rng = random.Random(seed)
+    cfg = cluster.cfg
+    tags = []
+    for i in range(n_ops):
+        mid = i % cfg.n_machines
+        sess = (i // cfg.n_machines) % cfg.sessions_per_machine
+        key = rng.randrange(keys)
+        r = rng.random()
+        if r < rmw_frac:
+            if cas_mode:
+                tags.append(cluster.rmw(mid, sess, key, RmwOp.CAS,
+                                        arg1=rng.randrange(4),
+                                        arg2=rng.randrange(1000)))
+            else:
+                tags.append(cluster.rmw(mid, sess, key, op, arg1=1))
+        elif r < rmw_frac + write_frac:
+            tags.append(cluster.write(mid, sess, key, rng.randrange(10_000)))
+        else:
+            tags.append(cluster.read(mid, sess, key))
+    return tags

@@ -1,0 +1,60 @@
+"""Public attention ops: Pallas flash forward with reference-recompute VJP.
+
+``attention`` is the framework-facing entry point.  ``impl`` selects:
+
+* ``"xla"`` — the pure-jnp reference (default inside models: lowers and
+  fuses well under pjit on any backend, and is what the dry-run compiles),
+* ``"pallas"`` — the Pallas flash kernel forward; the backward pass
+  recomputes attention with the reference implementation under
+  ``jax.custom_vjp`` (flash backward = recompute-style anyway; on-TPU this
+  trades HBM traffic for FLOPs exactly like activation checkpointing).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention
+from .ref import attention_ref, decode_attention_ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _attention_pallas(q, k, v, causal, window, interpret):
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           interpret=interpret)
+
+
+def _fwd(q, k, v, causal, window, interpret):
+    return _attention_pallas(q, k, v, causal, window, interpret), (q, k, v)
+
+
+def _bwd(causal, window, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: attention_ref(q_, k_, v_, causal=causal,
+                                         window=window), q, k, v)
+    return vjp(g)
+
+
+_attention_pallas.defvjp(_fwd, _bwd)
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+              causal: bool = True, window: Optional[int] = None,
+              impl: str = "xla", interpret: bool = True) -> jnp.ndarray:
+    """q: [B, Hq, Sq, D]; k, v: [B, Hkv, Sk, D]."""
+    if impl == "pallas":
+        return _attention_pallas(q, k, v, causal, window, interpret)
+    return attention_ref(q, k, v, causal=causal, window=window)
+
+
+def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     lengths: jnp.ndarray, *, impl: str = "xla",
+                     interpret: bool = True) -> jnp.ndarray:
+    """Single-token decode vs padded KV cache. q: [B, Hq, D]."""
+    del impl, interpret   # decode kernel: XLA reference (gather-bound op)
+    return decode_attention_ref(q, k, v, lengths)

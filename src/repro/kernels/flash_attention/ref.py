@@ -1,0 +1,80 @@
+"""Pure-jnp oracle for flash attention (GQA, causal, sliding window)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  *, causal: bool = True,
+                  window: Optional[int] = None,
+                  scale: Optional[float] = None) -> jnp.ndarray:
+    """Reference attention.
+
+    q: [B, Hq, Sq, D]; k, v: [B, Hkv, Sk, D] with Hq % Hkv == 0 (GQA).
+    ``window``: sliding-window size W — query t attends to keys in
+    (t - W, t] (Mistral/Gemma-local convention).  Computed in f32.
+    """
+    b, hq, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+
+    # Keep q/k/v in their storage dtype through the (potentially
+    # resharding) einsum inputs and accumulate in f32 via
+    # preferred_element_type: when the head count doesn't divide the model
+    # axis, XLA must all-gather these tensors — gathering bf16 instead of
+    # pre-upcast f32 halves that traffic (§Perf iteration d2).
+    qf = q * jnp.asarray(scale, q.dtype)
+    kf, vf = k, v
+    if group > 1:
+        kf = jnp.repeat(kf, group, axis=1)
+        vf = jnp.repeat(vf, group, axis=1)
+
+    logits = jnp.einsum("bhqd,bhkd->bhqk", qf, kf,
+                        preferred_element_type=jnp.float32)
+    # positions: queries occupy the last sq slots of the key timeline
+    qpos = jnp.arange(sq)[:, None] + (sk - sq)
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jnp.exp(logits - logits.max(-1, keepdims=True))
+    probs = jnp.where(mask[None, None], probs, 0.0)
+    denom = probs.sum(-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs.astype(q.dtype), vf,
+                     preferred_element_type=jnp.float32) / denom
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         lengths: jnp.ndarray,
+                         *, scale: Optional[float] = None) -> jnp.ndarray:
+    """Single-token decode vs a (padded) KV cache.
+
+    q: [B, Hq, D]; k, v: [B, Hkv, S, D]; lengths: [B] valid cache lengths.
+    """
+    b, hq, d = q.shape
+    hkv, s = k.shape[1], k.shape[2]
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    if group > 1:
+        kf = jnp.repeat(kf, group, axis=1)
+        vf = jnp.repeat(vf, group, axis=1)
+    logits = jnp.einsum("bhd,bhkd->bhk", qf, kf)
+    mask = jnp.arange(s)[None, :] < lengths[:, None]
+    logits = jnp.where(mask[:, None, :], logits, -jnp.inf)
+    probs = jnp.exp(logits - logits.max(-1, keepdims=True))
+    probs = jnp.where(mask[:, None, :], probs, 0.0)
+    out = jnp.einsum("bhk,bhkd->bhd", probs, vf) / probs.sum(-1,
+                                                             keepdims=True)
+    return out.astype(q.dtype)

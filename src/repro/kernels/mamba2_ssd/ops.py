@@ -1,0 +1,37 @@
+"""Public SSD op: Pallas chunked-dual forward + reference-recompute VJP."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd
+from .ref import ssd_ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def _ssd_pallas(x, dt, A, Bm, Cm, interpret):
+    return ssd(x, dt, A, Bm, Cm, interpret=interpret)
+
+
+def _fwd(x, dt, A, Bm, Cm, interpret):
+    return _ssd_pallas(x, dt, A, Bm, Cm, interpret), (x, dt, A, Bm, Cm)
+
+
+def _bwd(interpret, res, g):
+    x, dt, A, Bm, Cm = res
+    _, vjp = jax.vjp(ssd_ref, x, dt, A, Bm, Cm)
+    return vjp(g)
+
+
+_ssd_pallas.defvjp(_fwd, _bwd)
+
+
+def ssd_mix(x, dt, A, Bm, Cm, *, impl: str = "xla",
+            interpret: bool = True) -> jnp.ndarray:
+    """Mamba2 SSD token mixing.  See ref.ssd_ref for semantics."""
+    if impl == "pallas":
+        return _ssd_pallas(x, dt, A, Bm, Cm, interpret)
+    return ssd_ref(x, dt, A, Bm, Cm)

@@ -1,0 +1,69 @@
+"""Pure-jnp oracle for the Mamba2 SSD (state-space dual) recurrence.
+
+Per head h with state ``S in R^{N x P}`` (N = ssm state size, P = head dim):
+
+    a_t = exp(dt_t * A_h)                 (A_h < 0 -> a_t in (0, 1))
+    S_t = a_t * S_{t-1} + B_t (dt_t x_t)^T
+    y_t = C_t^T S_t
+
+B and C are shared across head *groups* (like GQA): B, C: [B, T, G, N] with
+heads mapped to group ``h // (H/G)``.  The D skip connection and gating live
+in the model layer, not the kernel.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+            Bm: jnp.ndarray, Cm: jnp.ndarray) -> jnp.ndarray:
+    """x: [B,T,H,P]; dt: [B,T,H] (>0); A: [H] (<0); Bm,Cm: [B,T,G,N].
+
+    Returns y: [B,T,H,P], computed in f32 via lax.scan.
+    """
+    b, t, h, p = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    rep = h // g
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    Bf = jnp.repeat(Bm.astype(jnp.float32), rep, axis=2)   # [B,T,H,N]
+    Cf = jnp.repeat(Cm.astype(jnp.float32), rep, axis=2)
+
+    def scan_one(x_h, dt_h, a_h, b_h, c_h):
+        # x_h: [T,P], dt_h: [T], b_h/c_h: [T,N]
+        def step(S, inp):
+            x_t, dt_t, b_t, c_t = inp
+            decay = jnp.exp(dt_t * a_h)
+            S = decay * S + b_t[:, None] * (dt_t * x_t)[None, :]   # [N,P]
+            y = (c_t[:, None] * S).sum(0)                          # [P]
+            return S, y
+
+        S0 = jnp.zeros((n, p), jnp.float32)
+        _, ys = jax.lax.scan(step, S0, (x_h, dt_h, b_h, c_h))
+        return ys
+
+    fn = jax.vmap(                                   # over batch
+        jax.vmap(scan_one, in_axes=(1, 1, 0, 1, 1), out_axes=1),
+        in_axes=(0, 0, None, 0, 0))
+    out = fn(xf, dtf, Af, Bf, Cf)
+    return out.astype(x.dtype)
+
+
+def ssd_decode_ref(x, dt, A, Bm, Cm, state):
+    """One decode step.  x: [B,H,P]; dt: [B,H]; Bm,Cm: [B,G,N];
+    state: [B,H,N,P] -> (y: [B,H,P], new_state)."""
+    b, h, p = x.shape
+    g, n = Bm.shape[1], Bm.shape[2]
+    rep = h // g
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    Bf = jnp.repeat(Bm.astype(jnp.float32), rep, axis=1)
+    Cf = jnp.repeat(Cm.astype(jnp.float32), rep, axis=1)
+    sf = state.astype(jnp.float32)
+    decay = jnp.exp(dtf * A.astype(jnp.float32)[None, :])          # [B,H]
+    new_s = decay[..., None, None] * sf \
+        + Bf[..., :, None] * (dtf[..., None] * xf)[..., None, :]
+    y = (Cf[..., :, None] * new_s).sum(-2)
+    return y.astype(x.dtype), new_s.astype(state.dtype)

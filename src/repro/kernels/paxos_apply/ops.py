@@ -1,0 +1,68 @@
+"""Jitted public wrapper for the paxos_apply kernel.
+
+Handles lane padding, the per-session registered-rmw-id gather/scatter (the
+only non-lane-parallel piece of the receiver step), and exposes a full
+"replica step": table' , replies, registry' = step(table, batch, registry).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.vector import KVTable, MsgBatch, NOOP, apply_batch
+from .kernel import LANE, paxos_apply
+
+
+def _pad(a: jnp.ndarray, n_to: int) -> jnp.ndarray:
+    return jnp.pad(a, (0, n_to - a.shape[0]))
+
+
+def gather_is_registered(registered: jnp.ndarray,
+                         msg: MsgBatch) -> jnp.ndarray:
+    """registered[gsess] >= counter, guarding gsess < 0 (fresh lanes)."""
+    sess = jnp.clip(msg.rmw_sess, 0, registered.shape[0] - 1)
+    got = registered[sess]
+    return (msg.rmw_sess >= 0) & (got >= msg.rmw_cnt)
+
+
+def scatter_register(registered: jnp.ndarray, msg: MsgBatch,
+                     mask: jnp.ndarray) -> jnp.ndarray:
+    """Segment-max registration of committed rmw-ids (§3.1.1)."""
+    sess = jnp.where(mask, msg.rmw_sess, 0)
+    cnt = jnp.where(mask, msg.rmw_cnt, -1)
+    return registered.at[sess].max(cnt)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret",
+                                             "use_kernel"))
+def replica_step(kv: KVTable, msg: MsgBatch, registered: jnp.ndarray,
+                 *, block_rows: int = 32, interpret: bool = True,
+                 use_kernel: bool = True):
+    """One receiver step of a replica over a conflict-free message batch.
+
+    ``registered`` is the bounded per-global-session table of committed
+    rmw-id counters.  Returns (new_table, replies, new_registered).
+    """
+    n = kv.state.shape[0]
+    tile = block_rows * LANE
+    n_pad = ((n + tile - 1) // tile) * tile
+
+    is_reg = gather_is_registered(registered, msg)
+    if use_kernel:
+        kv_p = KVTable(*[_pad(a, n_pad) for a in kv])
+        # padded lanes become NOOP automatically (kind=0)
+        msg_p = MsgBatch(*[_pad(a, n_pad) for a in msg])
+        new_kv, replies, reg_mask = paxos_apply(
+            kv_p, msg_p, _pad(is_reg.astype(jnp.int32), n_pad),
+            block_rows=block_rows, interpret=interpret)
+        new_kv = KVTable(*[a[:n] for a in new_kv])
+        replies = type(replies)(*[a[:n] for a in replies])
+        reg_mask = reg_mask[:n] != 0
+    else:
+        new_kv, replies, reg_mask = apply_batch(kv, msg, is_reg)
+
+    new_registered = scatter_register(registered, msg, reg_mask)
+    return new_kv, replies, new_registered

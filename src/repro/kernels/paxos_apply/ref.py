@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the paxos_apply kernel.
+
+The oracle *is* the vectorized engine (`repro.core.vector.apply_batch`),
+which is itself property-tested lane-by-lane against the scalar handlers
+(tests/test_vector_engine.py) — a two-link oracle chain ending at the
+paper's §4 pseudocode.
+"""
+
+from repro.core.vector import KVTable, MsgBatch, ReplyBatch, apply_batch
+
+__all__ = ["KVTable", "MsgBatch", "ReplyBatch", "apply_batch"]

@@ -1,0 +1,37 @@
+"""Public WKV6 op: Pallas forward + reference-recompute VJP."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import wkv6
+from .ref import wkv6_ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def _wkv6_pallas(r, k, v, w, u, interpret):
+    return wkv6(r, k, v, w, u, interpret=interpret)
+
+
+def _fwd(r, k, v, w, u, interpret):
+    return _wkv6_pallas(r, k, v, w, u, interpret), (r, k, v, w, u)
+
+
+def _bwd(interpret, res, g):
+    r, k, v, w, u = res
+    _, vjp = jax.vjp(wkv6_ref, r, k, v, w, u)
+    return vjp(g)
+
+
+_wkv6_pallas.defvjp(_fwd, _bwd)
+
+
+def wkv(r, k, v, w, u, *, impl: str = "xla",
+        interpret: bool = True) -> jnp.ndarray:
+    """RWKV6 token-mixing recurrence.  See ref.wkv6_ref for semantics."""
+    if impl == "pallas":
+        return _wkv6_pallas(r, k, v, w, u, interpret)
+    return wkv6_ref(r, k, v, w, u)

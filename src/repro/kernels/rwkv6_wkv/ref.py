@@ -1,0 +1,56 @@
+"""Pure-jnp oracle for the RWKV6 (Finch) WKV recurrence.
+
+Per head (sizes: K = key dim, V = value dim, state S in R^{K x V}):
+
+    y_t = (S_t + diag(u) k_t v_t^T)^T r_t
+    S_{t+1} = diag(w_t) S_t + k_t v_t^T
+
+with data-dependent per-channel decay w_t in (0, 1) (the Finch novelty —
+w is a function of the input, unlike RWKV5's static decay) and bonus u.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+             w: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+    """r,k,w: [B, H, T, K]; v: [B, H, T, V]; u: [H, K] -> y: [B, H, T, V].
+
+    Computed in f32 with a lax.scan over time.
+    """
+    rf, kf, vf, wf = (x.astype(jnp.float32) for x in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+    b, h, t, dk = r.shape
+    dv = v.shape[-1]
+
+    def head_scan(r_h, k_h, v_h, w_h, u_h):
+        # r_h: [T, K], v_h: [T, V], u_h: [K]
+        def step(S, inp):
+            r_t, k_t, v_t, w_t = inp
+            kv = k_t[:, None] * v_t[None, :]            # [K, V]
+            y = ((S + u_h[:, None] * kv) * r_t[:, None]).sum(0)   # [V]
+            S = w_t[:, None] * S + kv
+            return S, y
+
+        S0 = jnp.zeros((dk, dv), jnp.float32)
+        _, ys = jax.lax.scan(step, S0, (r_h, k_h, v_h, w_h))
+        return ys                                        # [T, V]
+
+    fn = jax.vmap(jax.vmap(head_scan, in_axes=(0, 0, 0, 0, 0)),
+                  in_axes=(0, 0, 0, 0, None))
+    out = fn(rf, kf, vf, wf, uf)                         # [B, H, T, V]
+    return out.astype(r.dtype)
+
+
+def wkv6_decode_ref(r, k, v, w, u, state):
+    """One decode step.  r,k,w: [B,H,K]; v: [B,H,V]; state: [B,H,K,V]."""
+    rf, kf, vf, wf = (x.astype(jnp.float32) for x in (r, k, v, w))
+    sf = state.astype(jnp.float32)
+    uf = u.astype(jnp.float32)
+    kv = kf[..., :, None] * vf[..., None, :]             # [B,H,K,V]
+    y = ((sf + uf[None, :, :, None] * kv) * rf[..., :, None]).sum(-2)
+    new_state = wf[..., :, None] * sf + kv
+    return y.astype(r.dtype), new_state.astype(state.dtype)

@@ -1,0 +1,230 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and extract the roofline terms.
+
+MUST be run as a fresh process (the XLA flag above is consumed at first
+jax init).  Usage:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-4b \
+        [--shape train_4k] [--multi-pod] [--out results.json]
+
+Per cell it records: compiled memory analysis (bytes/device), HLO FLOPs +
+bytes from cost_analysis, and collective bytes parsed from the optimized
+HLO (all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute operand sizes), from which launch/roofline.py derives
+the three roofline terms.
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+
+import jax
+import numpy as np
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4,
+    "u16": 2, "u8": 1, "pred": 1,
+}
+
+COLLECTIVE_RE = re.compile(
+    r"ROOT\s+\S+\s*=\s*|\b(\w[\w.-]*)\s*=\s*((?:\([^)]*\)|\S+))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8|s64|s32|s16|s8|u64|u32|u16|u8|"
+                      r"pred)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in SHAPE_RE.finditer(shape_str):
+        dt, dims = m.groups()
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+COLL_LINE_RE = re.compile(
+    r"\S+\s*=\s*((?:\([^)]*\)|[^\s(]+))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\{")
+WHILE_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+
+
+def collective_bytes(hlo_text: str, loop_trip: int = 1) -> dict:
+    """Sum result-shape bytes of every collective in the optimized HLO,
+    *trip-count aware*: XLA emits a scan as a while loop whose body is a
+    separate computation executed ``loop_trip`` times (the layer-stack
+    repeats), but static analysis sees it once.  We build the computation
+    call graph, assign each while body a multiplier of ``loop_trip``
+    (nested whiles multiply), and scale that computation's collectives.
+
+    Byte counts use each op's result shape — a close proxy for bytes moved
+    per device; the roofline divides by per-chip ICI bandwidth.
+    """
+    # 1. split into computations
+    comps: dict = {}
+    cur = None
+    for raw in hlo_text.splitlines():
+        line = raw.strip()
+        m = COMP_HDR_RE.match(line)
+        if m and line.endswith("{"):
+            cur = m.group(1)
+            comps[cur] = []
+        elif line.startswith("}"):
+            cur = None
+        elif cur is not None:
+            comps[cur].append(line)
+
+    # 2. while bodies -> multiplier (call-graph propagation from whiles)
+    mult = {name: 1 for name in comps}
+    changed = True
+    for _ in range(8):
+        if not changed:
+            break
+        changed = False
+        for name, lines in comps.items():
+            for line in lines:
+                if " while(" in line or line.startswith("while("):
+                    for body in WHILE_BODY_RE.findall(line):
+                        new = mult.get(name, 1) * loop_trip
+                        if mult.get(body, 1) < new:
+                            mult[body] = new
+                            changed = True
+
+    out = {"all-gather": 0, "all-reduce": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0, "count": 0,
+           "count_static": 0}
+    for name, lines in comps.items():
+        k = mult.get(name, 1)
+        for line in lines:
+            m = COLL_LINE_RE.match(line)
+            if not m:
+                continue
+            shape_str, kind = m.groups()
+            out[kind] += _shape_bytes(shape_str) * k
+            out["count"] += k
+            out["count_static"] += 1
+    return out
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             unroll: bool = False, verbose: bool = True,
+             overrides: dict = None, remat: bool = True) -> dict:
+    from repro.configs import archs as arch_configs
+    from repro.configs.shapes import SHAPES, skip_reason
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch import steps as steps_mod
+    from repro.models.registry import build_model
+    steps_mod.build_model = build_model
+
+    reason = skip_reason(arch, shape_name)
+    if reason:
+        return {"arch": arch, "shape": shape_name, "skipped": reason}
+
+    cfg = arch_configs.get(arch)
+    if overrides:
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    fn, args, in_sh, out_sh, donate = steps_mod.build_cell(
+        cfg, shape, mesh, unroll=unroll, remat=remat)
+
+    with mesh:
+        jitted = jax.jit(fn, in_shardings=in_sh,
+                         donate_argnums=donate or None)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+
+    model = steps_mod.build_model(cfg)
+    loop_trip = 1 if unroll else getattr(model, "repeats", cfg.n_layers)
+    if cfg.family == "encdec" and not unroll:
+        loop_trip = cfg.n_layers
+    coll = collective_bytes(hlo, loop_trip=loop_trip)
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "unrolled": unroll,
+        "chips": int(np.prod(mesh.devices.shape)),
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "flops": float(cost.get("flops", -1)),
+        "hlo_bytes": float(cost.get("bytes accessed", -1)),
+        "collectives": coll,
+        "memory": {
+            "argument_size": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_size": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_size": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "generated_code_size": int(
+                getattr(mem, "generated_code_size_in_bytes", 0)),
+        },
+        "n_params": cfg.n_params(),
+        "n_active_params": cfg.n_active_params(),
+    }
+    if verbose:
+        per_dev = (rec["memory"]["argument_size"]
+                   + rec["memory"]["temp_size"]) / rec["chips"]
+        print(f"[dryrun] {arch:18s} {shape_name:12s} {rec['mesh']:8s} "
+              f"lower {t_lower:6.1f}s compile {t_compile:6.1f}s  "
+              f"GFLOP {rec['flops'] / 1e9:12.1f}  "
+              f"coll {coll['count']:4d} ops "
+              f"{sum(v for k, v in coll.items() if not k.startswith('count')) / 1e9:8.2f} GB  "
+              f"mem/dev {per_dev / 1e9:6.2f} GB", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--unroll", action="store_true",
+                    help="straightline HLO for exact cost analysis")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--moe-impl", default=None)
+    ap.add_argument("--no-remat", action="store_true")
+    args = ap.parse_args()
+    overrides = {}
+    if args.moe_impl:
+        overrides["moe_impl"] = args.moe_impl
+
+    from repro.configs.shapes import SHAPES
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    records = []
+    for shape in shapes:
+        rec = run_cell(args.arch, shape, multi_pod=args.multi_pod,
+                       unroll=args.unroll, overrides=overrides,
+                       remat=not args.no_remat)
+        if "skipped" in rec:
+            print(f"[dryrun] {args.arch:18s} {shape:12s} SKIP: "
+                  f"{rec['skipped']}", flush=True)
+        records.append(rec)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1)
+    ok = all(("skipped" in r) or (r["flops"] != 0) for r in records)
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,227 @@
+"""Lowerable step functions (train / prefill / decode) + their shardings.
+
+This is the bridge between the model stack and pjit: it builds the jitted
+callables and the in/out sharding trees for a given (arch, shape, mesh)
+cell — used identically by the real trainer/server and the dry-run.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import Shape
+from repro.models.config import ModelConfig
+from repro.models.lm import LM
+from repro.models.registry import build_model, input_specs
+from repro.optim import adamw
+from repro.parallel.sharding import is_logical_spec, resolve
+
+
+# ---------------------------------------------------------------------------
+# Abstract init: shapes + specs without allocating a single parameter
+# ---------------------------------------------------------------------------
+
+def abstract_init(model, key=None):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    holder = {}
+
+    def f(k):
+        params, specs = model.init(k, dtype=jnp.bfloat16)
+        holder["specs"] = specs
+        return params
+
+    shapes = jax.eval_shape(f, key)
+    return shapes, holder["specs"]
+
+
+def param_shardings(specs, shapes, mesh: Mesh):
+    return jax.tree.map(
+        lambda spec, sd: NamedSharding(mesh,
+                                       resolve(spec, mesh, shape=sd.shape)),
+        specs, shapes, is_leaf=is_logical_spec)
+
+
+def _batch_sharding(name: str, sd, mesh: Mesh):
+    table = {
+        "tokens": ("batch", None),
+        "labels": ("batch", None),
+        "vision_embeds": ("batch", None, None),
+        "mrope_positions": (None, "batch", None),
+        "frames": ("batch", None, None),
+    }
+    return NamedSharding(mesh, resolve(table[name], mesh, shape=sd.shape))
+
+
+def batch_shardings(spec_tree: Dict[str, Any], mesh: Mesh):
+    return {k: _batch_sharding(k, sd, mesh) for k, sd in spec_tree.items()}
+
+
+def cache_shardings(model, mesh: Mesh, b: int, seq_len: int, *,
+                    seq_shard: bool):
+    """KV/state cache shardings, dispatched on the cache leaf's name.
+
+    ``seq_shard`` (long-context decode, global_batch=1) shards the KV
+    sequence dim over "data" — sequence parallelism — since the batch dim
+    cannot shard.
+    """
+    specs = model.cache_specs(b, seq_len)
+
+    def spec_for(path, sd):
+        name = None
+        for p in reversed(path):
+            if hasattr(p, "key"):
+                name = p.key
+                break
+        rank = len(sd.shape)
+        lead = (None,) * (rank - 4)
+        if name in ("k", "v"):        # [..., B, H, S, D]
+            ax = lead + (("batch", "kv_heads", "seq", None) if seq_shard
+                         else ("batch", "kv_heads", None, None))
+        elif name == "ssm":           # [..., B, H, N, P]
+            ax = lead + ("batch", "heads", None, None)
+        elif name == "wkv":           # [..., B, nh, K, V]
+            ax = lead + ("batch", "heads", None, None)
+        elif name == "conv":          # [..., B, K-1, C]
+            ax = (None,) * (rank - 3) + ("batch", None, None)
+        elif name in ("last_t", "last_c"):
+            ax = (None,) * (rank - 2) + ("batch", None)
+        else:                          # length scalars etc.
+            ax = (None,) * rank
+        return NamedSharding(mesh, resolve(ax, mesh, shape=sd.shape))
+
+    return jax.tree_util.tree_map_with_path(spec_for, specs)
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+def make_train_step(model, opt_cfg: adamw.AdamWConfig, *,
+                    microbatches: int = 1, remat: bool = True):
+    """(params, opt_state, batch) -> (params', opt_state', metrics).
+
+    ``microbatches > 1`` runs gradient accumulation under lax.scan — the
+    standard activation-memory / collective-overlap lever (each microbatch's
+    reduce-scatter overlaps the next microbatch's compute).
+    """
+
+    def loss_fn(params, batch):
+        return model.train_loss(params, batch, remat=remat)
+
+    def step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def split(x):
+                return x.reshape((microbatches,
+                                  x.shape[0] // microbatches) + x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def body(acc, b):
+                l, g = jax.value_and_grad(loss_fn)(params, b)
+                return jax.tree.map(jnp.add, acc,
+                                    (l, g)), None
+
+            zeros = (jnp.zeros(()),
+                     jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                  params))
+            (loss, grads), _ = jax.lax.scan(body, zeros, mb)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        new_params, new_opt, metrics = adamw.apply(opt_cfg, params, grads,
+                                                   opt_state)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return step
+
+
+def make_prefill(model):
+    def prefill(params, batch):
+        if model.cfg.family == "encdec":
+            return model.prefill(params, batch["frames"], batch["tokens"])
+        return model.prefill(params, batch["tokens"],
+                             batch.get("vision_embeds"),
+                             batch.get("mrope_positions"))
+    return prefill
+
+
+def make_decode_step(model):
+    def decode(params, caches, batch):
+        return model.decode_step(params, caches, batch["tokens"])
+    return decode
+
+
+# ---------------------------------------------------------------------------
+# Cell assembly (used by dryrun + real launchers)
+# ---------------------------------------------------------------------------
+
+def opt_state_specs(param_specs, opt_cfg: adamw.AdamWConfig):
+    moment = param_specs
+    err = param_specs if opt_cfg.compress_grads else None
+    return adamw.OptState(step=(), m=moment, v=moment, err=err)
+
+
+def build_cell(cfg: ModelConfig, shape: Shape, mesh: Mesh,
+               opt_cfg: Optional[adamw.AdamWConfig] = None,
+               unroll: bool = False, remat: bool = True):
+    """Returns (fn, example_args, in_shardings, out_shardings_hint, meta)
+    ready for jax.jit(...).lower(*example_args)."""
+    model = build_model(cfg, unroll=unroll)
+    p_shapes, p_specs = abstract_init(model)
+    p_shard = param_shardings(p_specs, p_shapes, mesh)
+    inputs = input_specs(cfg, shape)
+    b_shard = batch_shardings(inputs, mesh)
+
+    if shape.kind == "train":
+        opt_cfg = opt_cfg or adamw.AdamWConfig(
+            state_dtype=jnp.bfloat16 if cfg.n_params() > 2e11
+            else jnp.float32)
+        o_shapes = jax.eval_shape(
+            functools.partial(adamw.init, opt_cfg), p_shapes)
+        rep = NamedSharding(mesh, P())
+        o_shard = adamw.OptState(
+            step=rep,
+            m=param_shardings(p_specs, o_shapes.m, mesh),
+            v=param_shardings(p_specs, o_shapes.v, mesh),
+            err=param_shardings(p_specs, o_shapes.err, mesh)
+            if opt_cfg.compress_grads else None)
+        fn = make_train_step(model, opt_cfg, remat=remat)
+        args = (p_shapes, o_shapes, inputs)
+        in_sh = (p_shard, o_shard, b_shard)
+        donate = (0, 1)
+        out_sh = (p_shard, o_shard, None)
+    elif shape.kind == "prefill":
+        fn = make_prefill(model)
+        args = (p_shapes, inputs)
+        in_sh = (p_shard, b_shard)
+        donate = ()
+        out_sh = None
+    else:
+        seq_shard = shape.global_batch == 1
+        c_shapes = model.cache_specs(shape.global_batch, shape.seq_len)
+        c_shard = cache_shardings(model, mesh, shape.global_batch,
+                                  shape.seq_len, seq_shard=seq_shard)
+        # Decode is weight-stationary: params are read-only, so paying an
+        # FSDP all-gather per generated token is pure waste.  Drop the
+        # "embed_fsdp" (data-axis) shard dim whenever the model-axis-only
+        # layout fits the per-device HBM budget (§Perf s1).  kimi-k2's 1T
+        # params keep the 2-D layout (130 GB/dev otherwise).
+        per_dev = cfg.n_params() * 2 / mesh.shape.get("model", 1)
+        if per_dev < 10e9:
+            serve_specs = jax.tree.map(
+                lambda sp: tuple(None if a == "embed_fsdp" else a
+                                 for a in sp),
+                p_specs, is_leaf=is_logical_spec)
+            p_shard = param_shardings(serve_specs, p_shapes, mesh)
+        fn = make_decode_step(model)
+        args = (p_shapes, c_shapes, inputs)
+        in_sh = (p_shard, c_shard, b_shard)
+        donate = (1,)
+        out_sh = (None, c_shard)
+    return fn, args, in_sh, out_sh, donate

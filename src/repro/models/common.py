@@ -1,0 +1,130 @@
+"""Shared model primitives: norms, RoPE/M-RoPE, param init with sharding
+specs.
+
+Parameters are plain pytrees (nested dicts of jnp arrays).  Every init
+helper returns ``(params, specs)`` where ``specs`` mirrors the tree with
+tuples of *logical* axis names (see repro.parallel.sharding) — the launcher
+maps them to mesh PartitionSpecs for pjit in/out shardings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+Specs = Dict[str, Any]
+
+
+class Init:
+    """Collects (params, specs) pairs; splits RNG keys deterministically."""
+
+    def __init__(self, key: jax.Array, dtype=jnp.float32):
+        self.key = key
+        self.dtype = dtype
+
+    def sub(self) -> "Init":
+        self.key, k = jax.random.split(self.key)
+        child = Init.__new__(Init)
+        child.key, child.dtype = k, self.dtype
+        return child
+
+    def normal(self, shape, spec, *, std=0.02):
+        self.key, k = jax.random.split(self.key)
+        return jax.random.normal(k, shape, self.dtype) * std, spec
+
+    def zeros(self, shape, spec):
+        return jnp.zeros(shape, self.dtype), spec
+
+    def ones(self, shape, spec):
+        return jnp.ones(shape, self.dtype), spec
+
+
+def tree_build(**named: Tuple[Any, Any]) -> Tuple[Params, Specs]:
+    """{'w': (array, spec), ...} -> ({'w': array}, {'w': spec})"""
+    params = {k: v[0] for k, v in named.items()}
+    specs = {k: v[1] for k, v in named.items()}
+    return params, specs
+
+
+def stack_layers(pairs):
+    """[(params, specs), ...] -> (stacked params, specs with 'stack' axis)."""
+    params = jax.tree.map(lambda *xs: jnp.stack(xs), *[p for p, _ in pairs])
+    specs = jax.tree.map(lambda s: ("stack",) + tuple(s), pairs[0][1],
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, *,
+             eps: float = 1e-6) -> jnp.ndarray:
+    """RMSNorm with f32 *reduction* but bf16 *multiply*.
+
+    Computing the normalized tensor as ``x_f32 * rsqrt`` materializes a
+    full-width f32 copy of the residual; under TP, XLA then hoists the
+    partial-sum all-reduce above that upcast and moves 2x the bytes
+    (§Perf d4).  Only the variance reduction needs f32.
+    """
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * scale
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10000.0) -> jnp.ndarray:
+    """x: [B, H, S, D]; positions: [B, S] int.
+
+    Angles are computed in f32 (position * freq must not round), but the
+    rotation multiplies run in x's dtype: a full f32 copy of Q/K here gets
+    all-gathered by SPMD when KV heads replicate (§Perf d4).
+    """
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                          # [D/2]
+    ang = positions[:, None, :, None].astype(jnp.float32) * freqs  # [B,1,S,D/2]
+    cos = jnp.cos(ang).astype(x.dtype)
+    sin = jnp.sin(ang).astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray,
+                sections: Tuple[int, int, int],
+                theta: float = 1000000.0) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE: the head dim's frequency slots are split
+    into (temporal, height, width) sections, each rotated by its own
+    position stream.  positions3: [3, B, S]."""
+    d = x.shape[-1]
+    half = d // 2
+    assert sum(sections) == half, (sections, d)
+    freqs = rope_freqs(d, theta)                          # [half]
+    # build per-slot positions by section
+    sec_id = jnp.concatenate([
+        jnp.full((s,), i, jnp.int32) for i, s in enumerate(sections)])
+    pos = positions3[sec_id]                              # [half, B, S]
+    ang = pos.transpose(1, 2, 0).astype(jnp.float32) * freqs  # [B,S,half]
+    cos = jnp.cos(ang)[:, None].astype(x.dtype)           # [B,1,S,half]
+    sin = jnp.sin(ang)[:, None].astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+
+
+def default_positions(b: int, s: int, offset=0) -> jnp.ndarray:
+    return jnp.arange(s, dtype=jnp.int32)[None, :] + offset + \
+        jnp.zeros((b, 1), jnp.int32)

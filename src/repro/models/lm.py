@@ -1,0 +1,307 @@
+"""Unified decoder-only LM covering dense / GQA / gemma-local:global /
+MoE / RWKV6 / Mamba2-hybrid (zamba2) / VLM-backbone families.
+
+Layer organization: the layer stack is ``repeats`` x ``unit`` (+ tail),
+where ``unit`` is the repeating pattern (e.g. gemma3: 5 local + 1 global).
+Parameters of each unit position are stacked over ``repeats`` and the whole
+stack runs under one ``jax.lax.scan`` — this keeps HLO size and compile
+time O(unit), not O(layers), for 80-layer nets.  Zamba2's *shared*
+attention block lives outside the scan (same weights every period) while
+its per-invocation KV caches are scanned.
+
+Three lowered entry points per model (the dry-run's units of compilation):
+
+    train_loss(params, batch)            -> scalar loss (+aux)
+    prefill(params, tokens, ...)         -> (last-position logits, caches)
+    decode_step(params, caches, tokens)  -> (logits, new caches)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import shard
+from . import blocks
+from .blocks import (
+    apply_attention, apply_attention_decode, apply_mamba2,
+    apply_mamba2_decode, apply_mlp, apply_moe, apply_rwkv6,
+    apply_rwkv6_decode, attn_cache_spec, init_attention, init_mamba2,
+    init_mlp, init_moe, init_norm, init_rwkv6, mamba_cache_spec, norm_apply,
+    rwkv_cache_spec,
+)
+from .common import Init, default_positions, stack_layers, tree_build
+from .config import ModelConfig
+
+BIG_WINDOW = None     # "global" attention
+
+
+def derive_unit(cfg: ModelConfig) -> List[str]:
+    if cfg.family == "ssm":
+        return ["rwkv"]
+    if cfg.family == "hybrid":
+        return ["mamba"] * max(cfg.shared_attn_every, 1)
+    if cfg.local_ratio:
+        return ["local"] * cfg.local_ratio + ["global"]
+    if cfg.n_experts:
+        return ["moe_swa" if cfg.window else "moe"]
+    return ["swa" if cfg.window else "attn"]
+
+
+def _layer_kinds(cfg: ModelConfig):
+    unit = derive_unit(cfg)
+    repeats = cfg.n_layers // len(unit)
+    tail = cfg.n_layers - repeats * len(unit)
+    return unit, repeats, unit[:tail]
+
+
+def _init_layer(cfg: ModelConfig, kind: str, init: Init):
+    if kind in ("attn", "swa", "local", "global"):
+        a = init_attention(cfg, init.sub())
+        m = init_mlp(cfg, init.sub())
+        return tree_build(attn=a, mlp=m)
+    if kind in ("moe", "moe_swa"):
+        a = init_attention(cfg, init.sub())
+        m = init_moe(cfg, init.sub())
+        return tree_build(attn=a, moe=m)
+    if kind == "rwkv":
+        return init_rwkv6(cfg, init.sub())
+    if kind == "mamba":
+        return init_mamba2(cfg, init.sub())
+    raise ValueError(kind)
+
+
+def _kind_window(cfg: ModelConfig, kind: str) -> Optional[int]:
+    if kind in ("swa", "moe_swa", "local"):
+        return cfg.window
+    return None
+
+
+def _apply_layer(cfg, kind, p, x, *, positions, mrope_positions=None):
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("attn", "swa", "local", "global"):
+        x = apply_attention(cfg, p["attn"], x, positions=positions,
+                            window=_kind_window(cfg, kind),
+                            mrope_positions=mrope_positions)
+        x = apply_mlp(cfg, p["mlp"], x)
+    elif kind in ("moe", "moe_swa"):
+        x = apply_attention(cfg, p["attn"], x, positions=positions,
+                            window=_kind_window(cfg, kind),
+                            mrope_positions=mrope_positions)
+        x, aux = apply_moe(cfg, p["moe"], x)
+    elif kind == "rwkv":
+        x = apply_rwkv6(cfg, p, x)
+    elif kind == "mamba":
+        x = apply_mamba2(cfg, p, x)
+    return x, aux
+
+
+def _apply_layer_decode(cfg, kind, p, x, cache):
+    if kind in ("attn", "swa", "local", "global", "moe", "moe_swa"):
+        x, new = apply_attention_decode(cfg, p["attn"], x, cache,
+                                        window=_kind_window(cfg, kind))
+        if kind in ("moe", "moe_swa"):
+            x, _ = apply_moe(cfg, p["moe"], x)
+        else:
+            x = apply_mlp(cfg, p["mlp"], x)
+        return x, new
+    if kind == "rwkv":
+        return apply_rwkv6_decode(cfg, p, x, cache)
+    if kind == "mamba":
+        return apply_mamba2_decode(cfg, p, x, cache)
+    raise ValueError(kind)
+
+
+def _layer_cache_spec(cfg, kind, b, s, dtype=jnp.bfloat16):
+    if kind in ("attn", "global", "moe"):
+        return attn_cache_spec(cfg, b, s, None, dtype)
+    if kind in ("swa", "local", "moe_swa"):
+        return attn_cache_spec(cfg, b, s, cfg.window, dtype)
+    if kind == "rwkv":
+        return rwkv_cache_spec(cfg, b, dtype)
+    if kind == "mamba":
+        return mamba_cache_spec(cfg, b, dtype)
+    raise ValueError(kind)
+
+
+class LM:
+    """Functional model object: init / train_loss / prefill / decode_step."""
+
+    def __init__(self, cfg: ModelConfig, unroll: bool = False):
+        self.cfg = cfg
+        self.unit, self.repeats, self.tail = _layer_kinds(cfg)
+        # unroll=True trades compile time for straightline HLO, which makes
+        # cost_analysis/collective counts exact (XLA counts while-loop
+        # bodies once); used by the dry-run costing pass.
+        self.unroll = unroll
+
+    # -- init ----------------------------------------------------------------
+
+    def init(self, key: jax.Array, dtype=jnp.float32):
+        cfg = self.cfg
+        init = Init(key, dtype)
+        entries: Dict[str, Any] = {}
+        entries["embed"] = init.normal((cfg.vocab, cfg.d_model),
+                                       ("vocab", "embed_fsdp"))
+        if not cfg.tie_embeddings:
+            entries["unembed"] = init.normal((cfg.d_model, cfg.vocab),
+                                             ("embed_fsdp", "vocab"))
+        entries["final_norm"] = init_norm(cfg, init.sub())
+        units = []
+        for i, kind in enumerate(self.unit):
+            stacked = stack_layers([_init_layer(cfg, kind, init.sub())
+                                    for _ in range(self.repeats)])
+            units.append(stacked)
+        entries["units"] = (tuple(u[0] for u in units),
+                            tuple(u[1] for u in units))
+        if self.tail:
+            tails = [_init_layer(cfg, k, init.sub()) for k in self.tail]
+            entries["tail"] = (tuple(t[0] for t in tails),
+                               tuple(t[1] for t in tails))
+        if cfg.family == "hybrid":
+            a = init_attention(cfg, init.sub())
+            m = init_mlp(cfg, init.sub())
+            entries["shared_attn"] = tree_build(attn=a, mlp=m)
+        return tree_build(**entries)
+
+    # -- forward (train / prefill) -------------------------------------------
+
+    def _backbone(self, params, x, positions, mrope_positions=None,
+                  remat: bool = True):
+        cfg = self.cfg
+        shared = params.get("shared_attn")
+
+        def unit_body(carry, unit_params):
+            h, aux = carry
+            for i, kind in enumerate(self.unit):
+                h, a = _apply_layer(cfg, kind, unit_params[i], h,
+                                    positions=positions,
+                                    mrope_positions=mrope_positions)
+                aux = aux + a
+            if shared is not None:
+                h = apply_attention(cfg, shared["attn"], h,
+                                    positions=positions)
+                h = apply_mlp(cfg, shared["mlp"], h)
+            return (h, aux), None
+
+        body = jax.checkpoint(unit_body) if remat else unit_body
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   params["units"],
+                                   unroll=self.repeats if self.unroll else 1)
+        for i, kind in enumerate(self.tail):
+            x, a = _apply_layer(cfg, kind, params["tail"][i], x,
+                                positions=positions)
+            aux = aux + a
+        return x, aux
+
+    def _embed(self, params, tokens, vision_embeds=None):
+        x = params["embed"][tokens] * 1.0
+        if vision_embeds is not None:
+            x = jnp.concatenate([vision_embeds.astype(x.dtype), x], axis=1)
+        return shard(x, ("batch", None, None))
+
+    def logits(self, params, x):
+        cfg = self.cfg
+        h = norm_apply(cfg, params["final_norm"], x)
+        w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+        return (h @ w.astype(h.dtype)).astype(jnp.float32)
+
+    def train_loss(self, params, batch, *, remat: bool = True):
+        """batch: dict(tokens [B,S], plus vlm extras).  Next-token CE."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        vis = batch.get("vision_embeds")
+        x = self._embed(params, tokens, vis)
+        b, s, _ = x.shape
+        positions = default_positions(b, s)
+        mpos = batch.get("mrope_positions")
+        x, aux = self._backbone(params, x, positions, mpos, remat=remat)
+        logits = self.logits(params, x)
+        if vis is not None:
+            logits = logits[:, vis.shape[1]:]
+        targets = tokens[:, 1:]
+        lp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+        nll = -jnp.take_along_axis(lp, targets[..., None], -1)[..., 0]
+        return nll.mean() + 0.01 * aux
+
+    # -- serving ---------------------------------------------------------------
+
+    def cache_specs(self, b: int, s: int, dtype=jnp.bfloat16):
+        unit_caches = []
+        for kind in self.unit:
+            spec = _layer_cache_spec(self.cfg, kind, b, s, dtype)
+            unit_caches.append(jax.tree.map(
+                lambda sd: jax.ShapeDtypeStruct((self.repeats,) + sd.shape,
+                                                sd.dtype), spec))
+        out = {"units": tuple(unit_caches)}
+        if self.tail:
+            out["tail"] = tuple(_layer_cache_spec(self.cfg, k, b, s, dtype)
+                                for k in self.tail)
+        if self.cfg.family == "hybrid":
+            spec = attn_cache_spec(self.cfg, b, s, None, dtype)
+            out["shared"] = jax.tree.map(
+                lambda sd: jax.ShapeDtypeStruct((self.repeats,) + sd.shape,
+                                                sd.dtype), spec)
+        return out
+
+    def init_cache(self, b: int, s: int, dtype=jnp.bfloat16):
+        return jax.tree.map(lambda sd: jnp.zeros(sd.shape, sd.dtype),
+                            self.cache_specs(b, s, dtype))
+
+    def decode_step(self, params, caches, tokens):
+        """tokens: [B, 1] -> (logits [B, vocab], new caches)."""
+        cfg = self.cfg
+        x = self._embed(params, tokens)
+        shared = params.get("shared_attn")
+
+        def unit_body(h, xs):
+            unit_params, unit_caches, shared_cache = xs
+            new_caches = []
+            for i, kind in enumerate(self.unit):
+                h, nc = _apply_layer_decode(cfg, kind, unit_params[i], h,
+                                            unit_caches[i])
+                new_caches.append(nc)
+            new_shared = shared_cache
+            if shared is not None:
+                h, new_shared = apply_attention_decode(
+                    cfg, shared["attn"], h, shared_cache)
+                h = apply_mlp(cfg, shared["mlp"], h)
+            return h, (tuple(new_caches), new_shared)
+
+        shared_caches = caches.get("shared")
+        xs = (params["units"], caches["units"], shared_caches)
+        if shared_caches is None:
+            xs = (params["units"], caches["units"],
+                  jax.tree.map(lambda u: jnp.zeros((self.repeats, 1)),
+                               jnp.zeros((self.repeats, 1))))
+        x, (new_unit_caches, new_shared) = jax.lax.scan(
+            unit_body, x, xs, unroll=self.repeats if self.unroll else 1)
+        new = {"units": new_unit_caches}
+        if self.tail:
+            tails = []
+            for i, kind in enumerate(self.tail):
+                x, nc = _apply_layer_decode(cfg, kind, params["tail"][i], x,
+                                            caches["tail"][i])
+                tails.append(nc)
+            new["tail"] = tuple(tails)
+        if shared_caches is not None:
+            new["shared"] = new_shared
+        logits = self.logits(params, x)[:, 0]
+        return logits, new
+
+    def prefill(self, params, tokens, vision_embeds=None,
+                mrope_positions=None):
+        """Full-sequence forward; returns last-position logits.
+
+        (Cache population for a subsequent decode reuses the same forward —
+        the prefill cell lowers the forward pass, which dominates cost.)
+        """
+        x = self._embed(params, tokens, vision_embeds)
+        b, s, _ = x.shape
+        positions = default_positions(b, s)
+        x, _ = self._backbone(params, x, positions, mrope_positions,
+                              remat=False)
+        return self.logits(params, x[:, -1:])[:, 0]

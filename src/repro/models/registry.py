@@ -1,0 +1,59 @@
+"""Model registry + per-(arch, shape) input specs for lowering."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import Shape
+from .config import ModelConfig
+from .lm import LM
+from .whisper import EncDec
+
+VISION_TOKENS = 256          # VLM stub: patch embeddings prepended
+
+
+def build_model(cfg: ModelConfig, unroll: bool = False):
+    if cfg.family == "encdec":
+        return EncDec(cfg, unroll=unroll)
+    return LM(cfg, unroll=unroll)
+
+
+def input_specs(cfg: ModelConfig, shape: Shape,
+                dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    Weak-type-correct, shardable, no device allocation — the dry-run
+    lowers against these.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    tok = lambda bb, ss: jax.ShapeDtypeStruct((bb, ss), jnp.int32)
+
+    if cfg.family == "encdec":
+        frames = jax.ShapeDtypeStruct((b, cfg.enc_seq, cfg.d_model), dtype)
+        if shape.kind == "train":
+            return {"frames": frames, "tokens": tok(b, s)}
+        if shape.kind == "prefill":
+            return {"frames": frames, "tokens": tok(b, s)}
+        return {"tokens": tok(b, 1)}
+
+    if shape.kind == "train":
+        out = {"tokens": tok(b, s)}
+        if cfg.family == "vlm":
+            out["vision_embeds"] = jax.ShapeDtypeStruct(
+                (b, VISION_TOKENS, cfg.d_model), dtype)
+            out["mrope_positions"] = jax.ShapeDtypeStruct(
+                (3, b, s + VISION_TOKENS), jnp.int32)
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": tok(b, s)}
+        if cfg.family == "vlm":
+            out["vision_embeds"] = jax.ShapeDtypeStruct(
+                (b, VISION_TOKENS, cfg.d_model), dtype)
+            out["mrope_positions"] = jax.ShapeDtypeStruct(
+                (3, b, s + VISION_TOKENS), jnp.int32)
+        return out
+    # decode: one new token against a seq_len cache
+    return {"tokens": tok(b, 1)}

@@ -1,0 +1,119 @@
+"""Logical-axis sharding rules for the pjit data plane.
+
+Parameters and activations are annotated with *logical* axis names; a rule
+table maps them onto mesh axes.  One rule table covers every assigned
+architecture; the mesh may or may not have a "pod" axis (multi-pod runs
+shard batch over ("pod", "data")).
+
+Layout strategy (2-D sharding, MaxText-style):
+  * batch        -> ("pod", "data")      activations
+  * embed/mlp    -> "model"              tensor-parallel param dim
+  * fsdp         -> "data"               params' second shard dim (ZeRO-ish)
+  * experts      -> "model"              expert-parallel MoE
+  * heads        -> "model"              attention head parallelism
+  * seq          -> "data"               sequence parallelism for long decode
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> preferred mesh axes, first available wins
+RULES = {
+    "batch": (("pod", "data"),),
+    "seq": (("data",),),
+    "embed": (("model",),),
+    "embed_fsdp": (("data",),),
+    "mlp": (("model",),),
+    "heads": (("model",),),
+    "kv_heads": (("model",),),
+    "vocab": (("model",),),
+    "experts": (("model",),),
+    "expert_mlp": (("model",),),    # TP-within-expert strategy (mixtral)
+    "stack": ((),),                 # scan-stacked layer dim: never sharded
+    None: ((),),
+}
+
+
+def mesh_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def is_logical_spec(x) -> bool:
+    """Leaf predicate for spec trees: a tuple of axis names / None."""
+    return isinstance(x, tuple) and all(
+        e is None or isinstance(e, str) for e in x)
+
+
+def resolve(logical: Tuple[Optional[str], ...], mesh: Mesh,
+            shape: Optional[Tuple[int, ...]] = None) -> P:
+    """Map logical axes to a PartitionSpec valid for this mesh.
+
+    With ``shape`` given, the resolution is divisibility-aware: a dim whose
+    size the chosen mesh axes do not divide falls back to a shorter axis
+    prefix, and to replication if nothing divides (e.g. 8 KV heads on a
+    16-way model axis, or whisper's 51866 vocab).
+    """
+    present = set(mesh.axis_names)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for i, name in enumerate(logical):
+        spec: Tuple[str, ...] = ()
+        for cand in RULES.get(name, ((),)):
+            axes = tuple(a for a in cand if a in present)
+            if not axes:
+                continue
+            if shape is not None:
+                dim = shape[i]
+                while axes:
+                    prod = 1
+                    for a in axes:
+                        prod *= sizes[a]
+                    if dim % prod == 0:
+                        break
+                    axes = axes[:-1]
+                if not axes:
+                    continue
+            spec = axes
+            break
+        if len(spec) == 0:
+            out.append(None)
+        elif len(spec) == 1:
+            out.append(spec[0])
+        else:
+            out.append(spec)
+    return P(*out)
+
+
+def shard(x, logical: Tuple[Optional[str], ...], mesh: Optional[Mesh] = None):
+    """with_sharding_constraint by logical axes (no-op without a mesh).
+
+    Divisibility-aware: constraints degrade gracefully on dims the mesh
+    axes don't divide (batch=1 long-context decode, 8 KV heads on a 16-way
+    model axis, ...).
+    """
+    mesh = mesh or _current_mesh()
+    if mesh is None or mesh.empty:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, resolve(logical, mesh, shape=x.shape)))
+
+
+def _current_mesh() -> Optional[Mesh]:
+    env = jax.sharding.get_abstract_mesh()
+    try:
+        phys = jax._src.mesh.thread_resources.env.physical_mesh
+        if phys is not None and not phys.empty:
+            return phys
+    except Exception:
+        pass
+    if env is not None and not env.empty:
+        return env
+    return None
+
+
+def named_sharding(mesh: Mesh, *logical: Optional[str]) -> NamedSharding:
+    return NamedSharding(mesh, resolve(tuple(logical), mesh))

@@ -1,0 +1,104 @@
+"""Per-arch smoke tests: reduced config, one forward/train step on CPU,
+shape + finiteness assertions.  Full configs are dry-run-only."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.archs import ARCHS, SMOKE
+from repro.models.registry import build_model
+
+ARCH_NAMES = sorted(ARCHS)
+
+
+def smoke_batch(cfg, b=2, s=32):
+    key = jax.random.PRNGKey(0)
+    batch = {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab)}
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = jax.random.normal(
+            key, (b, 8, cfg.d_model), jnp.float32)
+        batch["mrope_positions"] = jnp.tile(jnp.arange(s + 8)[None, None],
+                                            (3, b, 1)).astype(jnp.int32)
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(key, (b, cfg.enc_seq,
+                                                  cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_smoke_train_step(name):
+    cfg = SMOKE[name]
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))[0]
+    batch = smoke_batch(cfg)
+
+    loss, grads = jax.value_and_grad(
+        lambda p: model.train_loss(p, batch))(params)
+    assert np.isfinite(float(loss)), f"{name}: non-finite loss"
+    gnorm = jax.tree.reduce(
+        lambda a, x: a + jnp.sum(jnp.square(x.astype(jnp.float32))),
+        grads, jnp.zeros(()))
+    assert np.isfinite(float(gnorm)) and float(gnorm) > 0, \
+        f"{name}: bad grad norm"
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_smoke_decode_step(name):
+    cfg = SMOKE[name]
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(2))[0]
+    b, smax = 2, 64
+    caches = model.init_cache(b, smax, dtype=jnp.float32)
+    tokens = jnp.zeros((b, 1), jnp.int32)
+    logits, new_caches = model.decode_step(params, caches, tokens)
+    assert logits.shape == (b, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all(), f"{name}: non-finite logits"
+    # a second step must advance lengths / states
+    logits2, _ = model.decode_step(params, new_caches,
+                                   jnp.ones((b, 1), jnp.int32))
+    assert np.isfinite(np.asarray(logits2)).all()
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_smoke_prefill(name):
+    cfg = SMOKE[name]
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(3))[0]
+    batch = smoke_batch(cfg, b=2, s=16)
+    if cfg.family == "encdec":
+        logits = model.prefill(params, batch["frames"], batch["tokens"])
+    elif cfg.family == "vlm":
+        logits = model.prefill(params, batch["tokens"],
+                               batch["vision_embeds"],
+                               batch["mrope_positions"])
+    else:
+        logits = model.prefill(params, batch["tokens"])
+    assert logits.shape == (2, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_full_configs_param_counts():
+    """The full configs' parameter counts are in the expected ballpark."""
+    expect_bounds = {
+        "qwen1.5-4b": (2.5e9, 5.5e9),
+        "phi3-mini-3.8b": (3.0e9, 4.5e9),
+        "qwen2.5-32b": (28e9, 36e9),
+        "gemma3-12b": (9e9, 14e9),
+        "qwen2-vl-72b": (65e9, 80e9),
+        "kimi-k2-1t-a32b": (0.8e12, 1.2e12),
+        "mixtral-8x7b": (42e9, 50e9),
+        "whisper-large-v3": (1.2e9, 2.2e9),
+        "rwkv6-7b": (6e9, 9e9),
+        "zamba2-7b": (5e9, 9e9),
+    }
+    for name, (lo, hi) in expect_bounds.items():
+        n = ARCHS[name].n_params()
+        assert lo <= n <= hi, f"{name}: n_params {n / 1e9:.2f}B not in " \
+                              f"[{lo / 1e9:.0f}B, {hi / 1e9:.0f}B]"
+
+
+def test_moe_active_params():
+    k2 = ARCHS["kimi-k2-1t-a32b"]
+    active = k2.n_active_params()
+    assert 20e9 <= active <= 45e9, f"K2 active {active / 1e9:.1f}B"

@@ -1,0 +1,74 @@
+"""Coordination facade: the paper's register as a training control plane."""
+
+import pytest
+
+from repro.core import checkers
+from repro.core.sim import NetConfig
+from repro.coord.registry import PaxosRegistry
+
+
+@pytest.fixture
+def reg():
+    return PaxosRegistry(n_machines=5, all_aboard=True)
+
+
+def test_cas_faa_swap_fetch(reg):
+    assert reg.faa("c") == 0
+    assert reg.faa("c", 5) == 1
+    assert reg.fetch("c") == 6
+    won, prev = reg.cas("c", 6, 100)
+    assert won and prev == 6
+    won, prev = reg.cas("c", 6, 200)
+    assert not won and prev == 100
+    assert reg.swap("c", 7) == 100
+    checkers.check_all(reg.cluster)
+
+
+def test_write_read_abd(reg):
+    reg.write("k", 11)
+    assert reg.read("k") == 11
+    reg.write("k", 12)
+    assert reg.read("k") == 12
+    checkers.check_all(reg.cluster)
+
+
+def test_checkpoint_commit_monotone(reg):
+    assert reg.commit_checkpoint("r", 10)
+    assert not reg.commit_checkpoint("r", 5)     # stale step refused
+    assert reg.commit_checkpoint("r", 20)
+    assert reg.latest_checkpoint("r") == 20
+
+
+def test_shard_leases_exactly_once(reg):
+    got = [reg.claim_shard("r") for _ in range(20)]
+    assert got == list(range(20))                # every shard once, in order
+
+
+def test_membership_epochs(reg):
+    assert reg.join_membership("r", 0) == 1
+    assert reg.join_membership("r", 3) == 0b1001
+    assert reg.leave_membership("r", 0) == 0b1000
+    assert reg.membership("r") == 0b1000
+
+
+def test_backup_grant_single_winner(reg):
+    wins = [reg.claim_backup("r", 7, node=i) for i in range(4)]
+    assert wins == [True, False, False, False]
+
+
+def test_ops_survive_minority_crash(reg):
+    reg.faa("c")
+    reg.crash(4)
+    reg.crash(3)
+    assert reg.faa("c") == 1                     # 3/5 majority still serves
+    reg.write("k", 9)
+    assert reg.read("k") == 9
+    checkers.check_all(reg.cluster)
+
+
+def test_lossy_network_control_plane():
+    reg = PaxosRegistry(n_machines=5, all_aboard=True,
+                        net=NetConfig(seed=5, drop_prob=0.05, dup_prob=0.05))
+    for i in range(10):
+        assert reg.faa("c") == i
+    checkers.check_all(reg.cluster)

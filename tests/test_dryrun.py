@@ -1,0 +1,90 @@
+"""Dry-run machinery: HLO collective parser, roofline math, and one real
+subprocess lower+compile against the 512-device production mesh."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.configs.archs import ARCHS
+from repro.configs.shapes import SHAPES, cells, skip_reason
+from repro.launch.dryrun import _shape_bytes, collective_bytes
+from repro.launch import roofline
+
+HLO = """
+HloModule jit_step
+
+%while_body.1 (p: (s32[], bf16[16,128]{1,0})) -> (s32[], bf16[16,128]) {
+  %ag = bf16[16,128]{1,0} all-gather(%x), dimensions={0}
+  %ar = f32[16,128]{1,0} all-reduce(%y), to_apply=%add
+}
+
+ENTRY %main.2 (a: bf16[2,2]) -> bf16[2,2] {
+  %w = (s32[], bf16[16,128]{1,0}) while(%init), condition=%cond, body=%while_body.1
+  %rs = bf16[64]{0} reduce-scatter(%z), dimensions={0}
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[16,128]") == 16 * 128 * 2
+    assert _shape_bytes("(f32[8], s32[4])") == 8 * 4 + 4 * 4
+    assert _shape_bytes("pred[]") == 1
+
+
+def test_collective_parser_trip_counts():
+    out = collective_bytes(HLO, loop_trip=10)
+    assert out["all-gather"] == 16 * 128 * 2 * 10      # inside while body
+    assert out["all-reduce"] == 16 * 128 * 4 * 10
+    assert out["reduce-scatter"] == 64 * 2             # entry: counted once
+    assert out["count_static"] == 3
+    assert out["count"] == 21
+
+
+def test_cells_and_skips():
+    total = sum(len(cells(a)) for a in ARCHS)
+    assert total == 34                                  # 40 - 6 long skips
+    assert skip_reason("qwen1.5-4b", "long_500k")
+    assert skip_reason("rwkv6-7b", "long_500k") is None
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_analytic_models_positive(arch):
+    cfg = ARCHS[arch]
+    for shape in cells(arch):
+        f = roofline.analytic_flops(cfg, shape)
+        b = roofline.analytic_hbm_bytes(cfg, shape)
+        assert f > 0 and b > 0, (arch, shape.name)
+        if shape.kind == "train":
+            # train must cost more than 6*N_active*D (remat + attention)
+            assert f > 6 * cfg.n_active_params() * shape.global_batch \
+                * shape.seq_len
+
+
+def test_artifacts_if_present():
+    import glob
+    paths = glob.glob("artifacts/dryrun_*_single.json")
+    if not paths:
+        pytest.skip("run scripts_run_dryruns.sh first")
+    for p in paths:
+        for rec in json.load(open(p)):
+            if "skipped" in rec:
+                continue
+            assert rec["compile_s"] > 0
+            assert rec["collectives"]["count"] > 0
+
+
+@pytest.mark.slow
+def test_subprocess_dryrun_compiles():
+    """One real lower+compile on the 16x16 production mesh (fresh process
+    so the 512-device XLA flag applies)."""
+    env = dict(os.environ, PYTHONPATH="src")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "whisper-large-v3", "--shape", "decode_32k"],
+        capture_output=True, text=True, timeout=500, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "decode_32k" in r.stdout

@@ -1,0 +1,137 @@
+"""Property-based safety tests (hypothesis) for the extended-CP register.
+
+Strategy: generate a deployment (3/5/7 machines), a fault profile (drops,
+dups, heavy tails, minority crashes at random times, partitions), a mixed
+workload, and an adversarial schedule seed.  Run to quiescence and assert
+every safety property from §7 plus linearizability.  Liveness is asserted
+only when the fault profile permits (no permanent majority loss).
+"""
+
+import hypothesis.strategies as st
+from hypothesis import HealthCheck, given, settings
+
+from repro.core import checkers
+from repro.core.node import ProtocolConfig
+from repro.core.sim import Cluster, NetConfig, workload
+from repro.core.types import RmwOp
+
+SLOW = settings(max_examples=25, deadline=None,
+                suppress_health_check=[HealthCheck.too_slow,
+                                       HealthCheck.data_too_large])
+
+
+@st.composite
+def deployments(draw):
+    n = draw(st.sampled_from([3, 5, 7]))
+    return ProtocolConfig(
+        n_machines=n,
+        sessions_per_machine=draw(st.integers(1, 4)),
+        backoff_threshold=draw(st.integers(2, 10)),
+        retransmit_threshold=draw(st.integers(10, 40)),
+        log_too_high_threshold=draw(st.integers(2, 6)),
+        all_aboard=draw(st.booleans()),
+    )
+
+
+@st.composite
+def fault_profiles(draw):
+    return NetConfig(
+        seed=draw(st.integers(0, 2**16)),
+        drop_prob=draw(st.sampled_from([0.0, 0.02, 0.08])),
+        dup_prob=draw(st.sampled_from([0.0, 0.05])),
+        heavy_tail_prob=draw(st.sampled_from([0.0, 0.03])),
+        heavy_tail_extra=draw(st.sampled_from([20.0, 80.0])),
+    )
+
+
+@SLOW
+@given(cfg=deployments(), net=fault_profiles(),
+       n_ops=st.integers(20, 90), keys=st.integers(1, 4),
+       wseed=st.integers(0, 2**16),
+       rmw_frac=st.sampled_from([1.0, 0.6, 0.3]),
+       write_frac=st.sampled_from([0.0, 0.3]),
+       cas_mode=st.booleans())
+def test_safety_under_faults(cfg, net, n_ops, keys, wseed, rmw_frac,
+                             write_frac, cas_mode):
+    cl = Cluster(cfg, net)
+    workload(cl, n_ops=n_ops, keys=keys, seed=wseed, rmw_frac=rmw_frac,
+             write_frac=write_frac, cas_mode=cas_mode)
+    done = cl.run_until_quiet(max_ticks=120_000)
+    checkers.check_all(cl)
+    assert done, "liveness: benign-fault run must quiesce"
+    assert len(cl.history) == n_ops
+
+
+@SLOW
+@given(cfg=deployments(), net=fault_profiles(),
+       n_ops=st.integers(20, 60), keys=st.integers(1, 3),
+       wseed=st.integers(0, 2**16),
+       crash_times=st.lists(st.integers(1, 60), min_size=0, max_size=3))
+def test_safety_under_minority_crashes(cfg, net, n_ops, keys, wseed,
+                                       crash_times):
+    cl = Cluster(cfg, net)
+    workload(cl, n_ops=n_ops, keys=keys, seed=wseed, rmw_frac=0.7,
+             write_frac=0.15)
+    # crash at most a minority, at the generated times
+    max_crashes = (cfg.n_machines - 1) // 2
+    victims = list(range(cfg.n_machines - 1, cfg.n_machines - 1 - max_crashes,
+                         -1))[:len(crash_times)]
+    for t, mid in sorted(zip(crash_times, victims)):
+        cl.step(t)
+        cl.crash(mid)
+    cl.run_until_quiet(max_ticks=120_000)
+    checkers.check_all(cl)
+    # ops issued on surviving machines completed
+    for info in cl._inflight.values():
+        assert info["mid"] in {m for m in victims}, \
+            f"op on surviving machine {info['mid']} never completed"
+
+
+@SLOW
+@given(net=fault_profiles(), wseed=st.integers(0, 2**16),
+       heal_after=st.integers(20, 200))
+def test_safety_across_partition_heal(net, wseed, heal_after):
+    cfg = ProtocolConfig(n_machines=5, sessions_per_machine=2)
+    cl = Cluster(cfg, net)
+    workload(cl, n_ops=40, keys=2, seed=wseed, rmw_frac=0.6, write_frac=0.2)
+    cl.step(5)
+    cl.network.partition([0, 1], [2, 3, 4])
+    cl.step(heal_after)
+    cl.network.heal()
+    done = cl.run_until_quiet(max_ticks=120_000)
+    checkers.check_all(cl)
+    assert done and len(cl.history) == 40
+
+
+@SLOW
+@given(wseed=st.integers(0, 2**16), restarts=st.integers(1, 3))
+def test_safety_across_restarts(wseed, restarts):
+    cfg = ProtocolConfig(n_machines=5, sessions_per_machine=2)
+    cl = Cluster(cfg, NetConfig(seed=wseed))
+    workload(cl, n_ops=40, keys=2, seed=wseed, rmw_frac=0.8, write_frac=0.1)
+    for r in range(restarts):
+        cl.step(10 + 7 * r)
+        cl.restart((2 + r) % 5)
+    cl.run_until_quiet(max_ticks=120_000)
+    checkers.check_all(cl)
+
+
+@settings(max_examples=40, deadline=None)
+@given(ops=st.lists(
+    st.tuples(st.sampled_from(list(RmwOp)), st.integers(0, 5),
+              st.integers(0, 5)),
+    min_size=1, max_size=25),
+    seed=st.integers(0, 2**16))
+def test_sequential_rmw_equals_local_replay(ops, seed):
+    """Single-session sequential RMWs == applying the ops to an int."""
+    cl = Cluster(ProtocolConfig(n_machines=3, sessions_per_machine=1),
+                 NetConfig(seed=seed))
+    expect = 0
+    from repro.core.types import apply_rmw
+    for op, a1, a2 in ops:
+        cl.rmw(0, 0, key=1, op=op, arg1=a1, arg2=a2)
+        assert cl.run_until_quiet()
+        got = cl.history[-1]
+        assert got["value"] == expect, "RMW must read its pre-state"
+        expect = apply_rmw(op, expect, a1, a2)
+    checkers.check_all(cl)

@@ -1,0 +1,250 @@
+"""End-to-end behaviour tests for the replicated RMW register (§4-§11)."""
+
+import pytest
+
+from repro.core import checkers
+from repro.core.node import ProtocolConfig, ReqKind, Request
+from repro.core.sim import Cluster, NetConfig, workload
+from repro.core.types import RmwOp
+
+
+def mk(n=5, sess=4, *, all_aboard=False, **net):
+    return Cluster(ProtocolConfig(n_machines=n, sessions_per_machine=sess,
+                                  all_aboard=all_aboard),
+                   NetConfig(**net))
+
+
+# ---------------------------------------------------------------------------
+# Basic semantics
+# ---------------------------------------------------------------------------
+
+def test_single_faa_counter():
+    cl = mk(seed=1)
+    for i in range(30):
+        cl.rmw(i % 5, 0, key=1, op=RmwOp.FAA, arg1=1)
+    assert cl.run_until_quiet()
+    checkers.check_all(cl)
+    # 30 increments decided: slots 1..30, final value 30
+    decided = checkers.check_log_agreement(cl)
+    assert len(decided) == 30
+    assert max(v for (_, _), (_, v, _) in decided.items()) == 30
+    # every machine that holds the key converged to value 30
+    for m in cl.machines:
+        assert m.kvs[1].value == 30
+
+
+def test_rmw_reads_pre_state():
+    """The completion's value is the pre-state (fetch-and-add semantics)."""
+    cl = mk(seed=2)
+    for _ in range(10):
+        cl.rmw(0, 0, key=3, op=RmwOp.FAA, arg1=5)
+        assert cl.run_until_quiet()
+    reads = sorted(h["value"] for h in cl.history)
+    assert reads == [i * 5 for i in range(10)]
+
+
+def test_cas_success_and_failure():
+    cl = mk(seed=3)
+    cl.rmw(0, 0, key=9, op=RmwOp.CAS, arg1=0, arg2=7)    # 0 -> 7
+    assert cl.run_until_quiet()
+    cl.rmw(1, 0, key=9, op=RmwOp.CAS, arg1=0, arg2=8)    # fails: v == 7
+    assert cl.run_until_quiet()
+    cl.rmw(2, 0, key=9, op=RmwOp.CAS, arg1=7, arg2=9)    # 7 -> 9
+    assert cl.run_until_quiet()
+    checkers.check_all(cl)
+    assert cl.machines[0].kvs[9].value == 9
+
+
+def test_writes_and_reads_abd():
+    cl = mk(seed=4)
+    cl.write(0, 0, key=2, value=41)
+    assert cl.run_until_quiet()
+    cl.read(1, 0, key=2)
+    assert cl.run_until_quiet()
+    read = [h for h in cl.history if h["kind"] == ReqKind.READ][-1]
+    assert read["value"] == 41
+    checkers.check_all(cl)
+
+
+def test_rmw_serializes_after_completed_write():
+    """§10.1 second invariant: an RMW must overwrite any completed write."""
+    cl = mk(seed=5)
+    cl.write(0, 0, key=6, value=100)
+    assert cl.run_until_quiet()
+    cl.rmw(1, 0, key=6, op=RmwOp.FAA, arg1=1)
+    assert cl.run_until_quiet()
+    rmw = [h for h in cl.history if h["kind"] == ReqKind.RMW][-1]
+    assert rmw["value"] == 100           # read the written value
+    cl.read(2, 0, key=6)
+    assert cl.run_until_quiet()
+    read = [h for h in cl.history if h["kind"] == ReqKind.READ][-1]
+    assert read["value"] == 101
+    checkers.check_all(cl)
+
+
+# ---------------------------------------------------------------------------
+# Contention, faults, availability
+# ---------------------------------------------------------------------------
+
+def test_contended_multikey_mixed():
+    cl = mk(seed=6)
+    workload(cl, n_ops=200, keys=3, seed=60, rmw_frac=0.5, write_frac=0.25)
+    assert cl.run_until_quiet(max_ticks=60_000)
+    assert len(cl.history) == 200
+    checkers.check_all(cl)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_lossy_network(seed):
+    cl = mk(seed=seed, drop_prob=0.05, dup_prob=0.05, heavy_tail_prob=0.02)
+    workload(cl, n_ops=120, keys=2, seed=seed + 30, rmw_frac=0.5,
+             write_frac=0.3)
+    assert cl.run_until_quiet(max_ticks=80_000)
+    assert len(cl.history) == 120
+    checkers.check_all(cl)
+
+
+def test_minority_crash_no_availability_loss():
+    """The paper's availability claim: a minority crash never blocks the
+    survivors — no leader, no election timeout."""
+    cl = mk(seed=7)
+    workload(cl, n_ops=100, keys=2, seed=70, rmw_frac=0.8, write_frac=0.1)
+    cl.step(15)
+    cl.crash(3)
+    cl.crash(4)
+    assert cl.run_until_quiet(max_ticks=80_000)
+    checkers.check_all(cl)
+    # every op issued on a surviving machine completed
+    surviving_ops = [t for t in cl._inflight.values() if t["mid"] <= 2]
+    assert not surviving_ops
+
+
+def test_majority_partition_keeps_committing():
+    cl = mk(seed=8)
+    workload(cl, n_ops=80, keys=2, seed=80)
+    cl.step(5)
+    cl.network.partition([0, 1], [2, 3, 4])
+    cl.step(400)
+    majority_done = len(cl.history)
+    assert majority_done > 0             # the 3-side kept deciding
+    cl.network.heal()
+    assert cl.run_until_quiet(max_ticks=80_000)
+    assert len(cl.history) == 80
+    checkers.check_all(cl)
+
+
+def test_steal_from_dead_proposer():
+    """§5: a Proposed entry held by a dead machine is stolen via higher TS."""
+    cl = mk(seed=9)
+    cl.rmw(0, 0, key=4)
+    cl.step(1)                            # M0 grabbed + proposed
+    cl.crash(0)
+    cl.rmw(1, 0, key=4)
+    assert cl.run_until_quiet(max_ticks=80_000)
+    checkers.check_all(cl)
+    done = [h for h in cl.history if h["mid"] == 1]
+    assert len(done) == 1
+
+
+def test_help_accepted_rmw_of_dead_machine():
+    """§6: an Accepted entry of a dead machine is helped, never stolen,
+    and commits exactly once."""
+    cl = mk(seed=10)
+    cl.rmw(0, 0, key=4, op=RmwOp.FAA, arg1=7)
+    # run just long enough for M0 to accept locally + broadcast accepts
+    cl.step(6)
+    cl.crash(0)
+    cl.rmw(1, 0, key=4, op=RmwOp.FAA, arg1=100)
+    assert cl.run_until_quiet(max_ticks=80_000)
+    checkers.check_all(cl)
+    decided = checkers.check_log_agreement(cl)
+    vals = sorted(v for (_k, _s), (_r, v, _b) in decided.items())
+    # M0's +7 was helped to completion, then M1's +100 on top (or M1 alone
+    # if M0 died before its accept made it out)
+    assert vals in ([7, 107], [100])
+
+
+# ---------------------------------------------------------------------------
+# All-aboard (§9)
+# ---------------------------------------------------------------------------
+
+def test_all_aboard_fast_path_dominates_uncontended():
+    cl = mk(all_aboard=True, seed=11)
+    workload(cl, n_ops=300, keys=64, seed=110)
+    assert cl.run_until_quiet()
+    checkers.check_all(cl)
+    s = cl.stats()
+    # paper: 99.7% of RMWs complete as all-aboard when uncontended
+    assert s["all_aboard_successes"] / s["rmw_completed"] > 0.75
+    # all-aboard commits are thin (§8.6: value elided when all acked)
+    assert s["thin_commits"] >= s["all_aboard_successes"]
+
+
+def test_all_aboard_falls_back_under_contention():
+    cl = mk(all_aboard=True, seed=12)
+    workload(cl, n_ops=120, keys=1, seed=120)     # single hot key
+    assert cl.run_until_quiet(max_ticks=80_000)
+    checkers.check_all(cl)
+    assert len(cl.history) == 120
+
+
+def test_all_aboard_timeout_on_slow_machine():
+    """§9.2: a quiet machine must not stall all-aboard forever; the
+    timeout counter falls back to CP."""
+    cl = mk(all_aboard=True, seed=13)
+    cl.step(60)                # let last_heard age without traffic
+    cl.crash(4)
+    # submit only to surviving machines (a crashed machine's clients are
+    # redirected in a real deployment)
+    for i in range(60):
+        cl.rmw(i % 4, (i // 4) % 4, key=i % 16)
+    assert cl.run_until_quiet(max_ticks=80_000)
+    checkers.check_all(cl)
+    assert len(cl.history) == 60
+    # with a suspected/dead peer the §9.2 note says skip all-aboard
+    s = cl.stats()
+    assert s.get("all_aboard_attempts", 0) < 60
+
+
+# ---------------------------------------------------------------------------
+# §8.7 Log-too-high recovery
+# ---------------------------------------------------------------------------
+
+def test_log_too_high_recommit_rescues_stalled_key():
+    """Commit issuer dies after reaching one machine; that machine's next
+    propose hits Log-too-high everywhere and must re-broadcast the commit."""
+    cl = mk(seed=14, sess=2)
+    cl.rmw(0, 0, key=5)
+    assert cl.run_until_quiet()
+    # now everyone knows slot 1. Partition M1 away except from M0, let M0
+    # commit slot 2 only into M1, then die.
+    cl.network.partition([2, 3, 4], [0])
+    cl.rmw(0, 0, key=5)
+    cl.step(12)                # propose+accept reach everyone? no: blocked.
+    cl.network.heal()
+    assert cl.run_until_quiet(max_ticks=80_000)
+    checkers.check_all(cl)
+
+
+def test_restarted_machine_catches_up():
+    cl = mk(seed=15)
+    for i in range(10):
+        cl.rmw(i % 5, 0, key=8)
+    assert cl.run_until_quiet()
+    cl.restart(2)              # wipes volatile state
+    cl.rmw(2, 0, key=8)        # its next RMW must discover log position
+    assert cl.run_until_quiet(max_ticks=80_000)
+    checkers.check_all(cl)
+    decided = checkers.check_log_agreement(cl)
+    slots = [s for (k, s) in decided if k == 8]
+    assert max(slots) == 11
+
+
+def test_stats_message_flow():
+    cl = mk(seed=16)
+    workload(cl, n_ops=50, keys=4, seed=160)
+    assert cl.run_until_quiet()
+    s = cl.stats()
+    assert s["sent_propose"] >= 50 * 4       # each RMW: 1 bcast to 4 peers
+    assert s["rmw_completed"] == 50
+    assert s["net_sent"] == s["net_delivered"] + s["net_dropped"]

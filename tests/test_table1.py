@@ -1,0 +1,156 @@
+"""Exhaustive enumeration of the paper's Table 1 — the core CP matrix.
+
+M1 sends {propose, accept} x {TS=L, TS=H} into an M2 whose KV-pair has
+already seen {propose, accept} x {L, H}.  Every cell's expected reply and
+state transition is asserted, including the two rule subtleties:
+
+* propose vs equal proposed-TS  -> Seen-higher-prop (>= comparison),
+* accept  vs equal proposed-TS  -> Ack               (strict > comparison),
+* accept-L into accepted-H      -> Seen-higher-acc,
+* propose-H into accept-L       -> Seen-lower-acc carrying the accepted
+  (TS, rmw-id, value) so the proposer can help (red "Help" cell).
+"""
+
+import pytest
+
+from repro.core.handlers import Registry, on_accept, on_propose
+from repro.core.types import (
+    KVPair, KVState, Msg, MsgKind, Rep, RmwId, TS,
+)
+
+L = TS(3, 1)     # low TS (version 3, machine 1)
+H = TS(9, 2)     # high TS
+
+RID_A = RmwId(1, 10)    # the RMW already seen by M2
+RID_B = RmwId(1, 20)    # the RMW M1 is pushing
+
+N_SESS = 64
+
+
+def fresh_kv(seen_kind: str, seen_ts: TS) -> KVPair:
+    """A KV-pair that has 'already seen <kind>-<ts>' for slot 1."""
+    kv = KVPair(key=7)
+    kv.log_no = 1
+    kv.proposed_ts = seen_ts
+    kv.rmw_id = RID_A
+    if seen_kind == "propose":
+        kv.state = KVState.PROPOSED
+    else:
+        kv.state = KVState.ACCEPTED
+        kv.accepted_ts = seen_ts
+        kv.accepted_value = 111
+    return kv
+
+
+def msg(kind: MsgKind, ts: TS) -> Msg:
+    return Msg(kind, src=1, key=7, ts=ts, log_no=1, rmw_id=RID_B, value=222,
+               lid=42)
+
+
+CASES = [
+    # (send_kind, send_ts, seen_kind, seen_ts, expected_reply)
+    ("propose", L, "propose", L, Rep.SEEN_HIGHER_PROP),   # blue: nack-restart
+    ("propose", L, "accept",  L, Rep.SEEN_HIGHER_ACC),    # blue
+    ("propose", L, "propose", H, Rep.SEEN_HIGHER_PROP),   # red rule 1
+    ("propose", L, "accept",  H, Rep.SEEN_HIGHER_ACC),    # red rule 2
+    ("accept",  L, "propose", L, Rep.ACK),                # green
+    ("accept",  L, "accept",  L, Rep.ACK),                # blue (idempotent)
+    ("accept",  L, "propose", H, Rep.SEEN_HIGHER_PROP),   # red rule 1
+    ("accept",  L, "accept",  H, Rep.SEEN_HIGHER_ACC),    # red rule 2
+    ("propose", H, "propose", L, Rep.ACK),                # red rule 3
+    ("propose", H, "accept",  L, Rep.SEEN_LOWER_ACC),     # red: Nack-Help!
+    ("propose", H, "propose", H, Rep.SEEN_HIGHER_PROP),   # blue (>= blocks)
+    ("propose", H, "accept",  H, Rep.SEEN_HIGHER_ACC),    # blue
+    ("accept",  H, "propose", L, Rep.ACK),                # green-ish row 4
+    ("accept",  H, "accept",  L, Rep.ACK),                # row 4: acc-H wins
+    ("accept",  H, "propose", H, Rep.ACK),                # green (equal TS)
+    ("accept",  H, "accept",  H, Rep.ACK),                # row 4
+]
+
+
+@pytest.mark.parametrize("send_kind,send_ts,seen_kind,seen_ts,expected",
+                         CASES)
+def test_table1_cell(send_kind, send_ts, seen_kind, seen_ts, expected):
+    kv = fresh_kv(seen_kind, seen_ts)
+    registry = Registry(N_SESS)
+    if send_kind == "propose":
+        rep = on_propose(kv, msg(MsgKind.PROPOSE, send_ts), registry)
+    else:
+        rep = on_accept(kv, msg(MsgKind.ACCEPT, send_ts), registry)
+    assert rep.opcode == expected, (
+        f"{send_kind}-{send_ts} into seen-{seen_kind}-{seen_ts}: "
+        f"got {rep.opcode.name}, want {expected.name}")
+
+
+def test_help_cell_payload():
+    """The Nack-Help cell must ship everything a helper needs (§4.2)."""
+    kv = fresh_kv("accept", L)
+    rep = on_propose(kv, msg(MsgKind.PROPOSE, H), Registry(N_SESS))
+    assert rep.opcode == Rep.SEEN_LOWER_ACC
+    assert rep.ts == L                     # the accepted-TS to out-help
+    assert rep.rmw_id == RID_A
+    assert rep.value == 111
+    # crucially the pair stays ACCEPTED but its proposed-TS advances (§6)
+    assert kv.state == KVState.ACCEPTED
+    assert kv.proposed_ts == H
+    assert kv.accepted_ts == L
+
+
+def test_ack_transitions_state():
+    kv = KVPair(key=7)
+    rep = on_propose(kv, msg(MsgKind.PROPOSE, L), Registry(N_SESS))
+    assert rep.opcode == Rep.ACK
+    assert kv.state == KVState.PROPOSED and kv.proposed_ts == L
+    rep = on_accept(kv, msg(MsgKind.ACCEPT, L), Registry(N_SESS))
+    assert rep.opcode == Rep.ACK
+    assert kv.state == KVState.ACCEPTED
+    assert kv.accepted_ts == L and kv.accepted_value == 222
+
+
+def test_accepted_never_reverts_to_proposed():
+    """Crucial take-away of §6: ACCEPTED can never go back to PROPOSED in
+    the same log-no — a higher propose only advances proposed-TS."""
+    kv = fresh_kv("accept", L)
+    on_propose(kv, msg(MsgKind.PROPOSE, H), Registry(N_SESS))
+    assert kv.state == KVState.ACCEPTED
+    higher = TS(99, 3)
+    on_propose(kv, msg(MsgKind.PROPOSE, higher), Registry(N_SESS))
+    assert kv.state == KVState.ACCEPTED
+    assert kv.proposed_ts == higher
+    assert kv.accepted_ts == L
+
+
+def test_log_window_nacks():
+    """Log-too-low / Log-too-high enforcement (inv-2/inv-3, §7.1)."""
+    kv = KVPair(key=7)
+    kv.last_committed_log_no = 5
+    kv.value, kv.val_log = 555, 5
+    kv.last_committed_rmw_id = RID_A
+    reg = Registry(N_SESS)
+
+    too_low = Msg(MsgKind.PROPOSE, 1, key=7, ts=H, log_no=4, rmw_id=RID_B)
+    rep = on_propose(kv, too_low, reg)
+    assert rep.opcode == Rep.LOG_TOO_LOW
+    assert rep.log_no == 5 and rep.value == 555      # ships last committed
+
+    too_high = Msg(MsgKind.PROPOSE, 1, key=7, ts=H, log_no=7, rmw_id=RID_B)
+    assert on_propose(kv, too_high, reg).opcode == Rep.LOG_TOO_HIGH
+    # accepts are nacked identically
+    assert on_accept(kv, Msg(MsgKind.ACCEPT, 1, key=7, ts=H, log_no=7,
+                             rmw_id=RID_B, value=1), reg).opcode \
+        == Rep.LOG_TOO_HIGH
+
+
+def test_rmw_id_committed_replies():
+    """§8.1: registered rmw-ids nack with one of two opcodes."""
+    kv = KVPair(key=7)
+    kv.last_committed_log_no = 3
+    reg = Registry(N_SESS)
+    reg.register(RID_B)
+    # proposing for slot 4 while the RMW committed somewhere <= 3
+    m = Msg(MsgKind.PROPOSE, 1, key=7, ts=H, log_no=4, rmw_id=RID_B)
+    assert on_propose(kv, m, reg).opcode == Rep.RMW_ID_COMMITTED
+    # ... but if a *later* slot already committed here, the issuer may skip
+    # its commit broadcast (the RMW is majority-committed by inv-1):
+    m2 = Msg(MsgKind.PROPOSE, 1, key=7, ts=H, log_no=3, rmw_id=RID_B)
+    assert on_propose(kv, m2, reg).opcode == Rep.RMW_ID_COMMITTED_NO_BCAST
