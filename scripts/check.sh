@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# CI-style tier-1 gate (see ROADMAP.md "Tier-1 verify").  Run from
+# anywhere; extra args are forwarded to pytest (e.g. -k, -x, -m slow).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -q "$@"

@@ -1,0 +1,55 @@
+"""JAX version-compatibility layer — the ONLY place version-sensitive
+JAX API usage is allowed.
+
+The repo targets a range of JAX releases whose mesh-introspection and
+Pallas ref-indexing surfaces differ:
+
+* mesh introspection: ``jax.sharding.get_abstract_mesh()`` (newer) vs the
+  legacy ``jax._src.mesh.thread_resources.env.physical_mesh`` (set by
+  ``with mesh:``); see :mod:`repro.compat.meshes`,
+* mesh activation: ``jax.sharding.use_mesh`` (newer) vs the legacy
+  ``Mesh.__enter__`` context,
+* Pallas indexing: raw Python ints inside ``pl.load``/``pl.store`` index
+  tuples stopped working (the discharge rule requires every non-slice
+  index to carry ``.shape``); see :mod:`repro.compat.pallas`.
+
+Everything outside this package imports the stable names below; the
+pinned-API canary in ``tests/test_compat.py`` fails in one obvious place
+when a JAX bump shifts the surface again.
+"""
+
+from repro.compat.aot import flatten_cost_analysis
+from repro.compat.meshes import (
+    abstract_mesh,
+    current_mesh,
+    physical_mesh,
+    sharding_constraint,
+    use_mesh,
+)
+from repro.compat.pallas import dslice, load_block, store_block
+from repro.compat.version import (
+    JAX_VERSION,
+    SUPPORTED_MAX,
+    SUPPORTED_MIN,
+    api_report,
+    check_pinned_api,
+    supported,
+)
+
+__all__ = [
+    "JAX_VERSION",
+    "SUPPORTED_MAX",
+    "SUPPORTED_MIN",
+    "abstract_mesh",
+    "api_report",
+    "check_pinned_api",
+    "current_mesh",
+    "dslice",
+    "flatten_cost_analysis",
+    "load_block",
+    "physical_mesh",
+    "sharding_constraint",
+    "store_block",
+    "supported",
+    "use_mesh",
+]

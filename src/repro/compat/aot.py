@@ -1,0 +1,16 @@
+"""AOT (lower/compile) result normalization across JAX versions.
+
+``Compiled.cost_analysis()`` returned a one-element list of dicts
+(per-device) through 0.4.x and a plain dict in newer releases;
+``flatten_cost_analysis`` accepts either and always hands back a dict,
+so roofline/dryrun code never branches on the JAX version.
+"""
+
+from __future__ import annotations
+
+
+def flatten_cost_analysis(cost) -> dict:
+    """Normalize Compiled.cost_analysis() output to a flat dict."""
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost) if cost else {}

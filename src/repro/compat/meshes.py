@@ -1,0 +1,93 @@
+"""Mesh introspection and activation across JAX versions.
+
+Introspection chain (first hit wins):
+  1. ``thread_resources.env.physical_mesh`` — set by the legacy
+     ``with mesh:`` context; a concrete Mesh with devices, preferred
+     because downstream code may need ``mesh.devices``.
+  2. ``jax.sharding.get_abstract_mesh()`` — newer JAX; set by
+     ``jax.sharding.use_mesh`` / ``jax.set_mesh``.
+
+Activation: ``use_mesh(mesh)`` picks ``jax.sharding.use_mesh`` when it
+exists and falls back to the legacy ``Mesh.__enter__`` context, so call
+sites are written once and survive the deprecation in either direction.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh
+
+_GET_ABSTRACT_MESH = getattr(jax.sharding, "get_abstract_mesh", None)
+_USE_MESH = getattr(jax.sharding, "use_mesh", None)
+
+
+def _thread_resources():
+    try:
+        from jax._src import mesh as mesh_lib
+        return mesh_lib.thread_resources
+    except Exception:
+        return None
+
+
+INTROSPECTION_BRANCH = (
+    "get_abstract_mesh" if _GET_ABSTRACT_MESH is not None
+    else "thread_resources" if _thread_resources() is not None
+    else None)
+ACTIVATION_BRANCH = "use_mesh" if _USE_MESH is not None else "mesh_context"
+
+
+def abstract_mesh():
+    """The ambient abstract mesh, or None (also None pre-0.5 JAX)."""
+    if _GET_ABSTRACT_MESH is None:
+        return None
+    mesh = _GET_ABSTRACT_MESH()
+    if mesh is None or mesh.empty:
+        return None
+    return mesh
+
+
+def physical_mesh() -> Optional[Mesh]:
+    """The legacy thread-resources physical mesh, or None."""
+    tr = _thread_resources()
+    if tr is None:
+        return None
+    try:
+        phys = tr.env.physical_mesh
+    except Exception:
+        return None
+    if phys is None or phys.empty:
+        return None
+    return phys
+
+
+def current_mesh() -> Optional[Mesh]:
+    """The active mesh under either activation style, or None."""
+    phys = physical_mesh()
+    if phys is not None:
+        return phys
+    return abstract_mesh()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    """Activate ``mesh`` for the block, new-style when available."""
+    if _USE_MESH is not None:
+        with _USE_MESH(mesh):
+            yield mesh
+    else:
+        with mesh:
+            yield mesh
+
+
+def sharding_constraint(x, sharding):
+    """Single entry point for with_sharding_constraint."""
+    return jax.lax.with_sharding_constraint(x, sharding)
+
+
+def mesh_axis_sizes(mesh) -> dict:
+    """{axis name: size} for a concrete or abstract mesh (``.shape`` is
+    the one accessor both expose; ``.devices`` is concrete-only)."""
+    return dict(mesh.shape)

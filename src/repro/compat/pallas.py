@@ -1,0 +1,88 @@
+"""Version-stable Pallas ref indexing.
+
+Newer JAX rejects raw Python ints inside ``pl.load`` / ``pl.store``
+index tuples: the state-discharge rule requires every non-slice index to
+carry ``.shape``, so ``pl.load(ref, (0, pl.dslice(i, n), ...))`` dies
+with ``AttributeError: 'int' object has no attribute 'shape'`` (interpret
+mode) or miscompiles.  The stable spelling is a *full-tuple* index of
+slices only: ints become ``pl.dslice(i, 1)`` and the resulting
+singleton axes are squeezed on load / re-expanded on store.
+
+``load_block`` / ``store_block`` do that normalization once, here, so
+kernels never spell a raw int index.  Scalar *traced* indices (e.g. a
+``fori_loop`` counter) are normalized the same way — dynamic slices are
+the one form every supported JAX accepts.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Guarded so a JAX that drops pl.dslice fails in check_pinned_api()
+# (one obvious place), not as an import-time AttributeError in every
+# kernel module.
+dslice = getattr(pl, "dslice", None)
+
+INDEXING_BRANCH = "dslice" if dslice is not None else None
+
+
+def _is_scalar_index(ix) -> bool:
+    if isinstance(ix, int):
+        return True
+    shape = getattr(ix, "shape", None)
+    if shape != ():
+        return False
+    dtype = getattr(ix, "dtype", None)
+    return dtype is not None and jnp.issubdtype(dtype, jnp.integer)
+
+
+def _normalize(ref, idx) -> Tuple[tuple, tuple]:
+    """Full-tuple index with ints lifted to dslice(i, 1).
+
+    Returns (normalized index, axes that were ints and must be squeezed
+    from a loaded block / expanded into a stored value).
+    """
+    ndim = len(ref.shape)
+    if idx is None:
+        idx = ()
+    elif not isinstance(idx, tuple):
+        idx = (idx,)
+    if len(idx) > ndim:
+        raise ValueError(f"index {idx} has more axes than ref {ref.shape}")
+    idx = idx + (slice(None),) * (ndim - len(idx))
+    norm, squeeze = [], []
+    for ax, ix in enumerate(idx):
+        if _is_scalar_index(ix):
+            if dslice is None:
+                raise RuntimeError(
+                    "repro.compat: pl.dslice missing in this JAX — see "
+                    "check_pinned_api()")
+            norm.append(dslice(ix, 1))
+            squeeze.append(ax)
+        else:
+            norm.append(ix)
+    return tuple(norm), tuple(squeeze)
+
+
+def load_block(ref, idx: Optional[tuple] = None):
+    """``pl.load`` with int axes normalized away, then squeezed — same
+    result shape as the historical int-index semantics.  ``idx=None`` (or
+    a short tuple) pads with full slices."""
+    norm, squeeze = _normalize(ref, idx)
+    out = pl.load(ref, norm)
+    if squeeze:
+        out = jnp.squeeze(out, axis=squeeze)
+    return out
+
+
+def store_block(ref, idx: Optional[tuple], val) -> None:
+    """``pl.store`` dual of ``load_block``: ``val`` is shaped as if int
+    axes were dropped; they are re-expanded to match the full-tuple
+    index."""
+    norm, squeeze = _normalize(ref, idx)
+    for ax in squeeze:
+        val = jnp.expand_dims(val, ax)
+    pl.store(ref, norm, val)

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.compat import load_block, store_block
 from repro.core.vector import KVTable, MsgBatch, ReplyBatch, apply_batch
 
 N_KV = len(KVTable._fields)          # 18 state planes
@@ -44,17 +45,17 @@ def _paxos_apply_kernel(*refs):
     out_rep_refs = out[N_KV:N_KV + N_REP]
     out_mask_ref = out[N_KV + N_REP]
 
-    kv = KVTable(*[r[...] for r in kv_refs])
-    msg = MsgBatch(*[r[...] for r in msg_refs])
-    is_reg = reg_ref[...] != 0
+    kv = KVTable(*[load_block(r) for r in kv_refs])
+    msg = MsgBatch(*[load_block(r) for r in msg_refs])
+    is_reg = load_block(reg_ref) != 0
 
     new_kv, replies, reg_mask = apply_batch(kv, msg, is_reg)
 
     for r, v in zip(out_kv_refs, new_kv):
-        r[...] = v
+        store_block(r, None, v)
     for r, v in zip(out_rep_refs, replies):
-        r[...] = v
-    out_mask_ref[...] = reg_mask.astype(jnp.int32)
+        store_block(r, None, v)
+    store_block(out_mask_ref, None, reg_mask.astype(jnp.int32))
 
 
 @functools.partial(jax.jit,

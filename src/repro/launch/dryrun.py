@@ -27,6 +27,9 @@ import time
 import jax
 import numpy as np
 
+from repro.compat import use_mesh
+from repro.compat.aot import flatten_cost_analysis
+
 DTYPE_BYTES = {
     "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8": 1,
     "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4,
@@ -143,7 +146,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     fn, args, in_sh, out_sh, donate = steps_mod.build_cell(
         cfg, shape, mesh, unroll=unroll, remat=remat)
 
-    with mesh:
+    with use_mesh(mesh):
         jitted = jax.jit(fn, in_shardings=in_sh,
                          donate_argnums=donate or None)
         lowered = jitted.lower(*args)
@@ -152,7 +155,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
         compiled = lowered.compile()
         t_compile = time.time() - t0
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = flatten_cost_analysis(compiled.cost_analysis())
         hlo = compiled.as_text()
 
     model = steps_mod.build_model(cfg)

@@ -222,8 +222,8 @@ def init_moe(cfg: ModelConfig, init: Init):
 
 def apply_moe(cfg: ModelConfig, p, x):
     if cfg.moe_impl == "shardmap":
-        from repro.parallel.sharding import _current_mesh
-        mesh = _current_mesh()
+        from repro.compat import current_mesh
+        mesh = current_mesh()
         ok = mesh is not None and "model" in mesh.axis_names and (
             cfg.moe_strategy == "tp"                      # ff-sliced experts
             or cfg.n_experts % mesh.shape["model"] == 0)  # expert-sharded

@@ -18,8 +18,10 @@ from __future__ import annotations
 
 from typing import Optional, Tuple
 
-import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.compat import current_mesh, sharding_constraint
+from repro.compat.meshes import mesh_axis_sizes
 
 # logical axis -> preferred mesh axes, first available wins
 RULES = {
@@ -58,7 +60,7 @@ def resolve(logical: Tuple[Optional[str], ...], mesh: Mesh,
     16-way model axis, or whisper's 51866 vocab).
     """
     present = set(mesh.axis_names)
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    sizes = mesh_axis_sizes(mesh)
     out = []
     for i, name in enumerate(logical):
         spec: Tuple[str, ...] = ()
@@ -95,24 +97,11 @@ def shard(x, logical: Tuple[Optional[str], ...], mesh: Optional[Mesh] = None):
     axes don't divide (batch=1 long-context decode, 8 KV heads on a 16-way
     model axis, ...).
     """
-    mesh = mesh or _current_mesh()
+    mesh = mesh if mesh is not None else current_mesh()
     if mesh is None or mesh.empty:
         return x
-    return jax.lax.with_sharding_constraint(
+    return sharding_constraint(
         x, NamedSharding(mesh, resolve(logical, mesh, shape=x.shape)))
-
-
-def _current_mesh() -> Optional[Mesh]:
-    env = jax.sharding.get_abstract_mesh()
-    try:
-        phys = jax._src.mesh.thread_resources.env.physical_mesh
-        if phys is not None and not phys.empty:
-            return phys
-    except Exception:
-        pass
-    if env is not None and not env.empty:
-        return env
-    return None
 
 
 def named_sharding(mesh: Mesh, *logical: Optional[str]) -> NamedSharding:

@@ -56,10 +56,16 @@ def test_cross_attention_prefix_cache():
                                atol=2e-5, rtol=2e-5)
 
 
-def test_noncausal_encoder():
+@pytest.mark.parametrize("interpret", [True, False])
+def test_noncausal_encoder(interpret):
+    """Exercises both Pallas paths: interpret (any backend) and the
+    Mosaic-compiled kernel (TPU only — the compat indexing helpers must
+    lower identically in both)."""
+    if not interpret and jax.default_backend() != "tpu":
+        pytest.skip("compiled Pallas TPU path needs a TPU backend")
     q, k, v = rand_qkv(jax.random.PRNGKey(3), 1, 4, 4, 256, 256, 64,
                        jnp.float32)
-    got = flash_attention(q, k, v, causal=False, interpret=True)
+    got = flash_attention(q, k, v, causal=False, interpret=interpret)
     want = attention_ref(q, k, v, causal=False)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                atol=2e-5, rtol=2e-5)

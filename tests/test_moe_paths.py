@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import use_mesh
 from repro.models import blocks
 from repro.models.common import Init
 from repro.models.config import ModelConfig
@@ -32,7 +33,7 @@ def test_shardmap_matches_spmd():
     y_spmd, aux_spmd = blocks.apply_moe_spmd(cfg, params, x)
 
     mesh = jax.make_mesh((1, 1), ("data", "model"))
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         y_sm, aux_sm = blocks.apply_moe_shardmap(cfg, params, x, mesh)
     np.testing.assert_allclose(np.asarray(y_sm), np.asarray(y_spmd),
                                atol=1e-5, rtol=1e-5)
@@ -70,7 +71,7 @@ def test_grads_flow_both_paths():
     def loss_sm(p):
         return blocks.apply_moe_shardmap(cfg, p, x, mesh)[0].sum()
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         g2 = jax.grad(loss_sm)(params)
     for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4,

@@ -7,6 +7,13 @@ every safety property from §7 plus linearizability.  Liveness is asserted
 only when the fault profile permits (no permanent majority loss).
 """
 
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property-based tests need hypothesis (pip install -r "
+           "requirements-dev.txt)")
+
 import hypothesis.strategies as st
 from hypothesis import HealthCheck, given, settings
 
