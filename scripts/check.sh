@@ -4,4 +4,7 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-exec python -m pytest -q "$@"
+python -m pytest -q "$@"
+# SIMD-engine smoke: tiny shapes, Pallas interpret mode, kernel-vs-oracle
+# equality and the paper's op-class ordering (see benchmarks/bench_vector.py)
+python benchmarks/bench_vector.py --smoke

@@ -247,6 +247,33 @@ def on_read_query(kv: KVPair, msg: Msg) -> Reply:
                  msg.lid, key=msg.key)
 
 
+def apply_msg(kv: KVPair, msg: Msg, registry: Registry) -> Reply:
+    """Single scalar entry point for every receiver-side message kind.
+
+    This is the equivalence hook for the vectorized engine: one scalar
+    message application == one lane of :func:`repro.core.vector.apply_batch`
+    (the differential trace-replay harness in :mod:`repro.core.replay`
+    drives both through this correspondence).  ``READ_COMMIT`` (§11 read
+    write-back) has full commit semantics on the receiver and shares
+    :func:`on_commit`, ``COMMIT_ACK`` reply included — the issuer routes
+    that ack by lid, as for any commit; the distinct wire kind only keeps
+    write-backs distinguishable in traces and stats.
+    """
+    if msg.kind == MsgKind.PROPOSE:
+        return on_propose(kv, msg, registry)
+    if msg.kind == MsgKind.ACCEPT:
+        return on_accept(kv, msg, registry)
+    if msg.kind in (MsgKind.COMMIT, MsgKind.READ_COMMIT):
+        return on_commit(kv, msg, registry)
+    if msg.kind == MsgKind.WRITE_QUERY:
+        return on_write_query(kv, msg)
+    if msg.kind == MsgKind.WRITE:
+        return on_write(kv, msg)
+    if msg.kind == MsgKind.READ_QUERY:
+        return on_read_query(kv, msg)
+    raise ValueError(f"not a receiver-side message kind: {msg.kind!r}")
+
+
 def get_kv(kvs: Dict[int, KVPair], key: int) -> KVPair:
     kv = kvs.get(key)
     if kv is None:

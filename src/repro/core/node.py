@@ -155,6 +155,10 @@ class Machine:
         # the linearizability checker needs "ghost" writes whose issuer died
         # before completion but whose installs were observed.
         self.write_log: List[Tuple[int, TS, int]] = []
+        # receiver-side message tap: when a list, every protocol message is
+        # appended (in processing order) before it is applied — the input of
+        # the differential trace-replay harness (repro.core.replay).
+        self.msg_trace: Optional[List[Msg]] = None
 
     # -- infrastructure ------------------------------------------------------
 
@@ -219,23 +223,13 @@ class Machine:
         self.last_heard[msg.src] = self._now()
         kv = get_kv(self.kvs, msg.key)
         self.bump(f"recv_{msg.kind.name.lower()}")
-        if msg.kind == MsgKind.PROPOSE:
-            rep = handlers.on_propose(kv, msg, self.registry)
-        elif msg.kind == MsgKind.ACCEPT:
-            rep = handlers.on_accept(kv, msg, self.registry)
-        elif msg.kind == MsgKind.COMMIT:
-            rep = handlers.on_commit(kv, msg, self.registry)
+        if self.msg_trace is not None:
+            self.msg_trace.append(dataclasses.replace(msg))
+        rep = handlers.apply_msg(kv, msg, self.registry)
+        if msg.kind in (MsgKind.COMMIT, MsgKind.READ_COMMIT):
             self._record_commit(msg.key, msg.log_no, msg.rmw_id,
                                 msg.value, msg.base_ts, kv,
                                 val_log=msg.val_log)
-        elif msg.kind == MsgKind.WRITE_QUERY:
-            rep = handlers.on_write_query(kv, msg)
-        elif msg.kind == MsgKind.WRITE:
-            rep = handlers.on_write(kv, msg)
-        elif msg.kind == MsgKind.READ_QUERY:
-            rep = handlers.on_read_query(kv, msg)
-        else:
-            raise ValueError(f"unexpected msg kind {msg.kind}")
         self.bump(f"rep_{rep.opcode.name.lower()}")
         return rep
 
@@ -954,7 +948,7 @@ class Machine:
         ab.lid = self._new_lid(ab.sess)
         self.bump("read_write_backs")
         kv = get_kv(self.kvs, ab.key)
-        msg = Msg(MsgKind.COMMIT, self.mid, key=ab.key,
+        msg = Msg(MsgKind.READ_COMMIT, self.mid, key=ab.key,
                   log_no=ab.best_log_no, rmw_id=ab.best_rmw_id,
                   value=ab.best_value, base_ts=ab.best_cs.base,
                   val_log=ab.best_cs.log_no, lid=ab.lid)
@@ -1000,7 +994,7 @@ class Machine:
                                 base_ts=ab.sent_cs.base,
                                 val_log=ab.sent_cs.log_no, lid=ab.lid))
         elif ab.phase == AbdPhase.R_COMMIT:
-            self._broadcast(Msg(MsgKind.COMMIT, self.mid, key=ab.key,
+            self._broadcast(Msg(MsgKind.READ_COMMIT, self.mid, key=ab.key,
                                 log_no=ab.best_log_no, rmw_id=ab.best_rmw_id,
                                 value=ab.best_value, base_ts=ab.best_cs.base,
                                 val_log=ab.best_cs.log_no, lid=ab.lid))

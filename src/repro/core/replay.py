@@ -1,0 +1,275 @@
+"""Differential trace replay: sim schedules become SIMD-engine tests.
+
+The discrete-event simulator (:mod:`repro.core.sim`) generates adversarial
+schedules — drops, duplicates, reordering, heavy tails, crashes — and every
+machine can tap the exact sequence of protocol messages it processed
+(``Machine.msg_trace``, enabled by ``Cluster.enable_msg_trace``).  This
+module replays such a trace through BOTH receiver implementations:
+
+* the scalar handlers, one message at a time, via
+  :func:`repro.core.handlers.apply_msg`;
+* the SIMD engine, bucketed into conflict-free per-key batches and pushed
+  through :func:`repro.kernels.paxos_apply.ops.replica_step` (Pallas kernel
+  in interpret mode by default, or the pure-jnp oracle).
+
+After every batch the replies must agree field-for-field (per reply
+opcode), and at the end of the trace the KV table, the registered-rmw-id
+table and the reply stream must agree plane-for-plane.  Any schedule the
+simulator can produce is thereby a kernel correctness test.
+
+**Bucketing contract** (see ``core/vector.py``): per batch, at most one
+message per key (lane ``i`` == key ``i``); per-key message order preserved
+across batches; and a batch is flushed early when a PROPOSE/ACCEPT's
+rmw-id was registered by a commit lane earlier in the *same* batch —
+registrations scatter after the batch, so the scalar side (which registers
+immediately) would otherwise observe a fresher registry than the gather.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import handlers, vector
+from .handlers import Registry, get_kv
+from .sim import Cluster, NetConfig, workload
+from .node import ProtocolConfig
+from .types import KVPair, Msg, MsgKind, Rep, RmwOp
+
+from repro.kernels.paxos_apply import ops
+
+
+class ReplayMismatch(AssertionError):
+    """The SIMD engine diverged from the scalar handlers on a trace."""
+
+
+# ---------------------------------------------------------------------------
+# scalar <-> lane conversions (full message vocabulary)
+# ---------------------------------------------------------------------------
+
+def kv_to_lanes(kv: KVPair) -> Dict[str, int]:
+    """One KVPair -> one lane of every KVTable plane."""
+    return dict(
+        state=int(kv.state), log_no=kv.log_no,
+        last_log=kv.last_committed_log_no,
+        prop_v=kv.proposed_ts.version, prop_m=kv.proposed_ts.mid,
+        acc_v=kv.accepted_ts.version, acc_m=kv.accepted_ts.mid,
+        acc_val=kv.accepted_value,
+        acc_base_v=kv.acc_base_ts.version, acc_base_m=kv.acc_base_ts.mid,
+        rmw_cnt=kv.rmw_id.counter, rmw_sess=kv.rmw_id.gsess,
+        value=kv.value, base_v=kv.base_ts.version, base_m=kv.base_ts.mid,
+        val_log=kv.val_log,
+        last_rmw_cnt=kv.last_committed_rmw_id.counter,
+        last_rmw_sess=kv.last_committed_rmw_id.gsess,
+    )
+
+
+def msg_to_lanes(msg: Msg) -> Dict[str, int]:
+    """One wire message -> one lane of every MsgBatch plane."""
+    return dict(
+        kind=vector.VEC_KIND[msg.kind],
+        ts_v=msg.ts.version, ts_m=msg.ts.mid, log_no=msg.log_no,
+        rmw_cnt=msg.rmw_id.counter, rmw_sess=msg.rmw_id.gsess,
+        value=msg.value if msg.value is not None else 0,
+        base_v=msg.base_ts.version, base_m=msg.base_ts.mid,
+        val_log=msg.val_log,
+        has_value=0 if msg.value is None else 1,
+    )
+
+
+# ---------------------------------------------------------------------------
+# conflict-free bucketing
+# ---------------------------------------------------------------------------
+
+_COMMIT_KINDS = (MsgKind.COMMIT, MsgKind.READ_COMMIT)
+_REG_READERS = (MsgKind.PROPOSE, MsgKind.ACCEPT)
+
+
+def bucket_conflict_free(trace: Sequence[Msg]) -> List[List[Msg]]:
+    """Greedily pack a per-machine message trace into conflict-free batches.
+
+    Flushes the open batch when (a) the next message's key already has a
+    message in it, or (b) the next message is a PROPOSE/ACCEPT whose rmw-id
+    a commit earlier in the open batch just registered (in-batch registry
+    visibility, see module docstring).
+    """
+    batches: List[List[Msg]] = []
+    cur: List[Msg] = []
+    keys_in_cur: set = set()
+    reg_in_cur: Dict[int, int] = {}
+    for msg in trace:
+        needs_reg_flush = (
+            msg.kind in _REG_READERS and msg.rmw_id.gsess >= 0
+            and reg_in_cur.get(msg.rmw_id.gsess, -1) >= msg.rmw_id.counter)
+        if msg.key in keys_in_cur or needs_reg_flush:
+            batches.append(cur)
+            cur, keys_in_cur, reg_in_cur = [], set(), {}
+        cur.append(msg)
+        keys_in_cur.add(msg.key)
+        if msg.kind in _COMMIT_KINDS and msg.rmw_id.gsess >= 0:
+            reg_in_cur[msg.rmw_id.gsess] = max(
+                reg_in_cur.get(msg.rmw_id.gsess, -1), msg.rmw_id.counter)
+    if cur:
+        batches.append(cur)
+    return batches
+
+
+def batch_to_msgbatch(batch: Sequence[Msg], n_keys: int) -> vector.MsgBatch:
+    """Conflict-free batch -> struct-of-arrays MsgBatch (NOOP elsewhere)."""
+    planes = {f: [0] * n_keys for f in vector.MsgBatch._fields}
+    planes["has_value"] = [1] * n_keys          # matches MsgBatch.noop
+    for msg in batch:
+        lane = msg_to_lanes(msg)
+        for f, v in lane.items():
+            planes[f][msg.key] = v
+    return vector.MsgBatch(*[jnp.asarray(planes[f], jnp.int32)
+                             for f in vector.MsgBatch._fields])
+
+
+# ---------------------------------------------------------------------------
+# reply comparison (fields meaningful per opcode, mirroring the wire format)
+# ---------------------------------------------------------------------------
+
+_TS_OPS = (Rep.SEEN_HIGHER_PROP, Rep.SEEN_HIGHER_ACC, Rep.SEEN_LOWER_ACC)
+_VALUE_OPS = (Rep.LOG_TOO_LOW, Rep.SEEN_LOWER_ACC, Rep.ACK_BASE_TS_STALE,
+              Rep.CARSTAMP_TOO_LOW)
+_RMW_OPS = (Rep.LOG_TOO_LOW, Rep.SEEN_LOWER_ACC, Rep.CARSTAMP_TOO_LOW)
+_LOG_OPS = (Rep.LOG_TOO_LOW, Rep.CARSTAMP_TOO_LOW)
+
+
+def _expected_reply_lanes(rep) -> Dict[str, int]:
+    """The ReplyBatch lanes a scalar Reply pins down (others are free)."""
+    want = {"kind": int(rep.kind), "opcode": int(rep.opcode)}
+    if rep.opcode in _TS_OPS:
+        want["ts_v"], want["ts_m"] = rep.ts.version, rep.ts.mid
+    if rep.opcode in _LOG_OPS:
+        want["log_no"] = rep.log_no
+    if rep.opcode in _RMW_OPS:
+        want["rmw_cnt"] = rep.rmw_id.counter
+        want["rmw_sess"] = rep.rmw_id.gsess
+    if rep.opcode in _VALUE_OPS:
+        want["value"] = rep.value
+        want["base_v"], want["base_m"] = rep.base_ts.version, rep.base_ts.mid
+        want["val_log"] = rep.val_log
+    if rep.kind == MsgKind.WRITE_QUERY_REPLY:
+        want["base_v"], want["base_m"] = rep.base_ts.version, rep.base_ts.mid
+    return want
+
+
+# ---------------------------------------------------------------------------
+# the differential replay itself
+# ---------------------------------------------------------------------------
+
+def replay_trace(trace: Sequence[Msg], *, n_keys: int, num_gsess: int,
+                 use_kernel: bool = True, interpret: bool = True,
+                 block_rows: int = 1) -> Dict[str, int]:
+    """Replay one machine's message trace through both implementations.
+
+    Returns replay stats; raises :class:`ReplayMismatch` on the first
+    divergence (reply stream, final KV planes, or registry).
+    """
+    kvs: Dict[int, KVPair] = {}
+    registry = Registry(num_gsess)
+    table = vector.KVTable.fresh(n_keys)
+    registered = jnp.zeros((num_gsess,), jnp.int32)
+
+    batches = bucket_conflict_free(trace)
+    kind_counts: Dict[str, int] = {}
+    for step, batch in enumerate(batches):
+        scalar_reps = []
+        for msg in batch:
+            if msg.key >= n_keys:
+                raise ValueError(f"trace touches key {msg.key} >= n_keys "
+                                 f"{n_keys}")
+            rep = handlers.apply_msg(get_kv(kvs, msg.key), msg, registry)
+            scalar_reps.append(rep)
+            k = msg.kind.name.lower()
+            kind_counts[k] = kind_counts.get(k, 0) + 1
+        msgb = batch_to_msgbatch(batch, n_keys)
+        table, replies, registered = ops.replica_step(
+            table, msgb, registered, block_rows=block_rows,
+            interpret=interpret, use_kernel=use_kernel)
+        rep_np = {f: np.asarray(p) for f, p in
+                  zip(vector.ReplyBatch._fields, replies)}
+        for msg, rep in zip(batch, scalar_reps):
+            want = _expected_reply_lanes(rep)
+            got = {f: int(rep_np[f][msg.key]) for f in want}
+            if got != want:
+                raise ReplayMismatch(
+                    f"reply diverged at batch {step}, key {msg.key}, "
+                    f"msg {msg}:\n scalar: {want}\n vector: {got}")
+
+    # final state: every lane, plane for plane
+    table_np = {f: np.asarray(p) for f, p in
+                zip(vector.KVTable._fields, table)}
+    for key in range(n_keys):
+        scalar_kv = kvs.get(key) or KVPair(key=key)
+        want = kv_to_lanes(scalar_kv)
+        got = {f: int(table_np[f][key]) for f in vector.KVTable._fields}
+        if got != want:
+            diff = {f: (want[f], got[f]) for f in want if want[f] != got[f]}
+            raise ReplayMismatch(
+                f"final KV state diverged at key {key} "
+                f"(field: (scalar, vector)): {diff}")
+    got_reg = [int(x) for x in np.asarray(registered)]
+    if got_reg != registry.committed:
+        raise ReplayMismatch(
+            f"registry diverged:\n scalar: {registry.committed}\n"
+            f" vector: {got_reg}")
+
+    stats = {"messages": len(trace), "batches": len(batches)}
+    stats.update(kind_counts)
+    return stats
+
+
+def replay_cluster(cluster: Cluster, *, n_keys: int,
+                   use_kernel: bool = True, interpret: bool = True,
+                   block_rows: int = 1,
+                   machines: Optional[Sequence[int]] = None
+                   ) -> Dict[str, int]:
+    """Replay every (or selected) machine's trace; aggregate the stats."""
+    total: Dict[str, int] = {"machines": 0}
+    mids = machines if machines is not None else range(len(cluster.machines))
+    for mid in mids:
+        trace = cluster.machines[mid].msg_trace
+        if trace is None:
+            raise ValueError(
+                f"machine {mid} has no msg_trace — call "
+                f"cluster.enable_msg_trace() before running the workload")
+        stats = replay_trace(trace, n_keys=n_keys,
+                             num_gsess=cluster.cfg.num_gsess,
+                             use_kernel=use_kernel, interpret=interpret,
+                             block_rows=block_rows)
+        total["machines"] += 1
+        for k, v in stats.items():
+            total[k] = total.get(k, 0) + v
+    return total
+
+
+def run_and_replay(seed: int, *, n_ops: int = 24, keys: int = 3,
+                   cfg: Optional[ProtocolConfig] = None,
+                   net: Optional[NetConfig] = None,
+                   rmw_frac: float = 0.45, write_frac: float = 0.3,
+                   use_kernel: bool = True, interpret: bool = True,
+                   block_rows: int = 1) -> Dict[str, int]:
+    """End-to-end harness: seeded faulty sim run -> differential replay.
+
+    Defaults exercise the full vocabulary (mixed RMW/write/read) under an
+    adversarial network (drops, dups, heavy tails) and replay **every**
+    machine's trace through the Pallas kernel in interpret mode.
+    """
+    cfg = cfg or ProtocolConfig(n_machines=5, sessions_per_machine=2)
+    net = net or NetConfig(seed=seed, drop_prob=0.06, dup_prob=0.05,
+                           heavy_tail_prob=0.03, heavy_tail_extra=25.0)
+    cluster = Cluster(cfg, net)
+    cluster.enable_msg_trace()
+    workload(cluster, n_ops=n_ops, keys=keys, seed=seed,
+             rmw_frac=rmw_frac, write_frac=write_frac, op=RmwOp.FAA)
+    if not cluster.run_until_quiet(max_ticks=120_000):
+        raise RuntimeError(f"sim (seed {seed}) did not quiesce")
+    stats = replay_cluster(cluster, n_keys=keys, use_kernel=use_kernel,
+                           interpret=interpret, block_rows=block_rows)
+    stats["history"] = len(cluster.history)
+    return stats

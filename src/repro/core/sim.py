@@ -84,10 +84,19 @@ class Network:
 
     def deliver_due(self, until: float,
                     machines: Sequence[Machine]) -> int:
-        """Deliver every message with arrival time <= until."""
+        """Deliver every message with arrival time <= until.
+
+        A message addressed to a crashed machine is *dropped*, not
+        delivered: ``Machine.deliver`` discards it anyway (crash-stop), so
+        counting it as delivered would make ``delivered`` disagree with the
+        number of messages that actually reached an inbox.
+        """
         delivered = 0
         while self.heap and self.heap[0][0] <= until:
             t, _, dst, payload = heapq.heappop(self.heap)
+            if not machines[dst].alive:
+                self.stats["dropped"] += 1
+                continue
             machines[dst].deliver(payload)
             delivered += 1
         self.stats["delivered"] += delivered
@@ -123,6 +132,14 @@ class Cluster:
         self._inflight: Dict[int, dict] = {}
         self._tag = itertools.count(1)
         self.rounds = 0
+
+    def enable_msg_trace(self) -> None:
+        """Record every receiver-side protocol message, per machine and in
+        processing order, for the differential trace-replay harness
+        (:mod:`repro.core.replay`).  Traces survive :meth:`restart`."""
+        for m in self.machines:
+            if m.msg_trace is None:
+                m.msg_trace = []
 
     # -- client API ----------------------------------------------------------
 
@@ -173,6 +190,7 @@ class Cluster:
         fresh.write_clock = old.write_clock
         fresh.commit_log = old.commit_log
         fresh.write_log = old.write_log
+        fresh.msg_trace = old.msg_trace
         self.machines[mid] = fresh
 
     # -- driving -------------------------------------------------------------

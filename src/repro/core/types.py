@@ -138,6 +138,7 @@ class MsgKind(enum.IntEnum):
     WRITE_ACK = 9
     READ_QUERY = 10        # ABD read round 1: carstamp compare
     READ_QUERY_REPLY = 11
+    READ_COMMIT = 12       # §11 read write-back: commit semantics, ABD issuer
 
 
 class Rep(enum.IntEnum):
@@ -188,7 +189,7 @@ class Msg:
         """Approximate wire size; used by the message-count/bytes benchmarks."""
         base = 1 + 1 + 4 + 8 + 8 + 8          # kind, src, key, ts, log, rmw_id
         if self.kind in (MsgKind.PROPOSE, MsgKind.ACCEPT, MsgKind.COMMIT,
-                         MsgKind.WRITE):
+                         MsgKind.READ_COMMIT, MsgKind.WRITE):
             base += 8 + 4                      # base_ts + val_log
         if self.value is not None:
             base += 8

@@ -3,20 +3,58 @@
 The paper scales Classic Paxos by running thousands of *independent* per-key
 state machines across worker threads (§3).  On TPU the analogous resource is
 vector lanes, not threads: we recast the receiver-side hot loop — "apply one
-propose/accept/commit per key to the KV-pair metadata table and emit replies"
-— as a branch-free select network over struct-of-arrays state.
+message per key to the KV-pair metadata table and emit replies" — as a
+branch-free select network over struct-of-arrays state.
 
 This module is the pure-``jnp`` engine.  It is simultaneously
 
 * the reference oracle for the Pallas kernel in
   :mod:`repro.kernels.paxos_apply` (same function, explicit VMEM tiling), and
 * semantically equivalent to the scalar handlers in
-  :mod:`repro.core.handlers` (property-tested against them).
+  :mod:`repro.core.handlers` (property-tested against them, and
+  differentially trace-replayed against them by :mod:`repro.core.replay`).
 
-Batches are *conflict-free by construction*: slot ``i`` of a message batch
-targets key ``i`` of the table (the scheduler buckets incoming messages so
-each key sees at most one message per step — exactly the paper's per-key
-serialization, reshaped for SIMD).  Empty slots carry ``kind = NOOP``.
+**Message vocabulary.**  The engine speaks the *full* receiver-side wire
+vocabulary, one lane-kind per :class:`~repro.core.types.MsgKind` a replica
+can receive:
+
+===============  ==========================================================
+lane kind        scalar handler / semantics
+===============  ==========================================================
+``NOOP``         empty lane — state untouched, reply ``opcode = kind = -1``
+``PROPOSE``      ``handlers.on_propose``  (§4.2, §8.3, §10.3)
+``ACCEPT``       ``handlers.on_accept``   (§4.5, all-aboard epoch guard)
+``COMMIT``       ``handlers.on_commit``   (§4.7, §8.6 thin commits)
+``WRITE_QUERY``  ``handlers.on_write_query`` — ABD write round 1: reply
+                 carries the local base-TS (§10)
+``WRITE``        ``handlers.on_write`` — ABD write round 2: carstamp-gated
+                 value install at ``(base-TS, 0)`` (§10)
+``READ_QUERY``   ``handlers.on_read_query`` — §11 three-way carstamp
+                 compare; ``Carstamp-too-low`` ships value + carstamp +
+                 last-committed rmw-id/log-no for the read write-back
+``READ_COMMIT``  §11 read write-back: commit semantics on the receiver
+                 (``handlers.on_commit``) and a ``COMMIT_ACK`` reply
+                 (issuer-side routing stays lid-based); the distinct kind
+                 keeps write-backs visible in traces/stats and lets the
+                 replay bucketer treat them as registering commit lanes
+===============  ==========================================================
+
+ABD lanes are the paper's common case: they bypass consensus entirely
+(no proposed/accepted state is touched), which is what makes write and
+read lanes cheaper *per client op* than RMW lanes — an RMW costs three
+receiver messages (propose, accept, commit), an ABD write two, an ABD
+read one (see ``benchmarks/bench_vector.py``).
+
+**Conflict-free-batch contract.**  Slot ``i`` of a message batch targets
+key ``i`` of the table, and each key carries *at most one* real message
+per batch (idle lanes are ``NOOP``) — exactly the paper's per-key
+serialization, reshaped for SIMD.  The scheduler (or
+``replay.bucket_conflict_free``) must additionally start a new batch
+before a PROPOSE/ACCEPT whose rmw-id was registered by a commit lane
+earlier in the same batch: registrations scatter *after* the batch, so
+in-batch registered-ness would otherwise be invisible to the gather.
+Per-key message order must be preserved across batches; cross-key order
+is free (lanes are independent).
 
 The per-session registered-rmw-id table needs gather/scatter and therefore
 lives *outside* the lane-parallel core: ``is_registered`` is a precomputed
@@ -30,10 +68,34 @@ from typing import NamedTuple, Tuple
 
 import jax.numpy as jnp
 
-from .types import KVState, Rep
+from .types import KVState, MsgKind, Rep
 
-# message kinds in the vector engine (narrower than MsgKind: the RMW path)
+# message kinds in the vector engine: the RMW path ...
 NOOP, PROPOSE, ACCEPT, COMMIT = 0, 1, 2, 3
+# ... and the ABD path (§10–§11)
+WRITE_QUERY, WRITE, READ_QUERY, READ_COMMIT = 4, 5, 6, 7
+
+# wire MsgKind -> vector lane kind, for every receiver-side message
+VEC_KIND = {
+    MsgKind.PROPOSE: PROPOSE,
+    MsgKind.ACCEPT: ACCEPT,
+    MsgKind.COMMIT: COMMIT,
+    MsgKind.WRITE_QUERY: WRITE_QUERY,
+    MsgKind.WRITE: WRITE,
+    MsgKind.READ_QUERY: READ_QUERY,
+    MsgKind.READ_COMMIT: READ_COMMIT,
+}
+
+# vector lane kind -> reply MsgKind emitted on that lane
+REPLY_KIND = {
+    PROPOSE: MsgKind.PROP_REPLY,
+    ACCEPT: MsgKind.ACC_REPLY,
+    COMMIT: MsgKind.COMMIT_ACK,
+    WRITE_QUERY: MsgKind.WRITE_QUERY_REPLY,
+    WRITE: MsgKind.WRITE_ACK,
+    READ_QUERY: MsgKind.READ_QUERY_REPLY,
+    READ_COMMIT: MsgKind.COMMIT_ACK,
+}
 
 I32 = jnp.int32
 
@@ -65,6 +127,22 @@ class KVTable(NamedTuple):
         z = jnp.zeros((n_keys,), I32)
         return KVTable(*([z] * 18))
 
+    @staticmethod
+    def fresh(n_keys: int) -> "KVTable":
+        """All-default table matching ``KVPair()`` field defaults exactly
+        (TS_ZERO mids and RMW_ID_NONE sessions are ``-1``, not ``0``) — the
+        correct t=0 state for differential replay against the scalar side."""
+        z = jnp.zeros((n_keys,), I32)
+        neg = jnp.full((n_keys,), -1, I32)
+        return KVTable(
+            state=z, log_no=z, last_log=z,
+            prop_v=z, prop_m=neg, acc_v=z, acc_m=neg, acc_val=z,
+            acc_base_v=z, acc_base_m=neg,
+            rmw_cnt=z, rmw_sess=neg,
+            value=z, base_v=z, base_m=neg, val_log=z,
+            last_rmw_cnt=z, last_rmw_sess=neg,
+        )
+
 
 class MsgBatch(NamedTuple):
     """One message per key lane (``kind = NOOP`` for idle lanes)."""
@@ -88,8 +166,9 @@ class MsgBatch(NamedTuple):
 
 
 class ReplyBatch(NamedTuple):
-    """Reply lanes (opcode + payloads, presence depending on opcode)."""
+    """Reply lanes (kind + opcode + payloads, presence per opcode)."""
 
+    kind: jnp.ndarray           # reply MsgKind (REPLY_KIND), -1 for NOOP lanes
     opcode: jnp.ndarray         # Rep value, or -1 for NOOP lanes
     ts_v: jnp.ndarray           # Seen-higher-*: blocking proposed-TS
     ts_m: jnp.ndarray
@@ -141,7 +220,11 @@ def apply_batch(kv: KVTable, msg: MsgBatch,
     """
     is_prop_msg = msg.kind == PROPOSE
     is_acc_msg = msg.kind == ACCEPT
-    is_commit = msg.kind == COMMIT
+    # §11 read write-backs are commits on the receiver (handlers.apply_msg)
+    is_commit = (msg.kind == COMMIT) | (msg.kind == READ_COMMIT)
+    is_wq = msg.kind == WRITE_QUERY
+    is_w = msg.kind == WRITE
+    is_rq = msg.kind == READ_QUERY
     active = msg.kind != NOOP
     pa = is_prop_msg | is_acc_msg           # propose-or-accept path
 
@@ -204,6 +287,17 @@ def apply_batch(kv: KVTable, msg: MsgBatch,
     c_release = c & (kv.state != int(KVState.INVALID)) \
         & (kv.log_no <= msg.log_no)
 
+    # ---- ABD write lane (§10): install iff carstamp (base, 0) is newer ----
+    w_install = is_w & cs_gt(msg.base_v, msg.base_m, 0,
+                             kv.base_v, kv.base_m, kv.val_log)
+
+    # ---- ABD read-query lane (§11): three-way carstamp comparison ----------
+    rq_low = is_rq & cs_gt(kv.base_v, kv.base_m, kv.val_log,
+                           msg.base_v, msg.base_m, msg.val_log)
+    rq_eq = (is_rq & (msg.base_v == kv.base_v) & (msg.base_m == kv.base_m)
+             & (msg.val_log == kv.val_log))
+    rq_high = is_rq & ~rq_low & ~rq_eq
+
     # ---- new KV state -------------------------------------------------------
     # propose acks (non-fast) grab/overwrite the pair as PROPOSED
     grab = p_ack_fresh | p_ack_prop
@@ -235,6 +329,11 @@ def apply_batch(kv: KVTable, msg: MsgBatch,
     new_base_v = _where(c_install, c_base_v, kv.base_v)
     new_base_m = _where(c_install, c_base_m, kv.base_m)
     new_val_log = _where(c_install, msg.val_log, kv.val_log)
+    # ABD writes land at carstamp (msg base-TS, 0), regardless of msg.val_log
+    new_value = _where(w_install, msg.value, new_value)
+    new_base_v = _where(w_install, msg.base_v, new_base_v)
+    new_base_m = _where(w_install, msg.base_m, new_base_m)
+    new_val_log = _where(w_install, 0, new_val_log)
     new_last_log = _where(c_log_adv, msg.log_no, kv.last_log)
     new_last_rmw_cnt = _where(c_log_adv, msg.rmw_cnt, kv.last_rmw_cnt)
     new_last_rmw_sess = _where(c_log_adv, msg.rmw_sess, kv.last_rmw_sess)
@@ -263,8 +362,15 @@ def apply_batch(kv: KVTable, msg: MsgBatch,
     op = _where(p_seen_lower_acc, int(Rep.SEEN_LOWER_ACC), op)
     op = _where(p_ack | a_ack, int(Rep.ACK), op)
     op = _where(p_ack_stale, int(Rep.ACK_BASE_TS_STALE), op)
-    op = _where(c, int(Rep.ACK), op)
+    op = _where(c | is_wq | is_w, int(Rep.ACK), op)
+    op = _where(rq_low, int(Rep.CARSTAMP_TOO_LOW), op)
+    op = _where(rq_eq, int(Rep.CARSTAMP_EQUAL), op)
+    op = _where(rq_high, int(Rep.CARSTAMP_TOO_HIGH), op)
     op = _where(~active, -1, op)
+
+    rep_kind = jnp.full_like(msg.kind, -1)
+    for lane_kind, reply_kind in REPLY_KIND.items():
+        rep_kind = _where(msg.kind == lane_kind, int(reply_kind), rep_kind)
 
     seen_higher = (p_seen_higher_prop | p_seen_higher_acc
                    | a_seen_higher_prop | a_seen_higher_acc)
@@ -272,24 +378,30 @@ def apply_batch(kv: KVTable, msg: MsgBatch,
                       _where(p_seen_lower_acc, kv.acc_v, 0))
     rep_ts_m = _where(seen_higher, kv.prop_m,
                       _where(p_seen_lower_acc, kv.acc_m, 0))
-    rep_log = _where(r_log_too_low, kv.last_log, 0)
-    rep_rmw_cnt = _where(r_log_too_low, kv.last_rmw_cnt,
+    # Carstamp-too-low (§11) ships the same local-value payload group as
+    # Log-too-low / Ack-base-TS-stale, plus the last-committed rmw-id/log-no
+    # the reader needs for its write-back commit.
+    local_val = r_log_too_low | p_ack_stale | rq_low
+    rep_log = _where(r_log_too_low | rq_low, kv.last_log, 0)
+    rep_rmw_cnt = _where(r_log_too_low | rq_low, kv.last_rmw_cnt,
                          _where(p_seen_lower_acc, kv.rmw_cnt, 0))
-    rep_rmw_sess = _where(r_log_too_low, kv.last_rmw_sess,
+    rep_rmw_sess = _where(r_log_too_low | rq_low, kv.last_rmw_sess,
                           _where(p_seen_lower_acc, kv.rmw_sess, -1))
-    rep_value = _where(r_log_too_low | p_ack_stale, kv.value,
+    rep_value = _where(local_val, kv.value,
                        _where(p_seen_lower_acc, kv.acc_val, 0))
-    rep_base_v = _where(r_log_too_low | p_ack_stale, kv.base_v,
+    # Write-query replies (§10 round 1) carry the local base-TS alone.
+    rep_base_v = _where(local_val | is_wq, kv.base_v,
                         _where(p_seen_lower_acc, kv.acc_base_v, 0))
-    rep_base_m = _where(r_log_too_low | p_ack_stale, kv.base_m,
+    rep_base_m = _where(local_val | is_wq, kv.base_m,
                         _where(p_seen_lower_acc, kv.acc_base_m, 0))
-    rep_val_log = _where(r_log_too_low | p_ack_stale, kv.val_log,
+    rep_val_log = _where(local_val, kv.val_log,
                          _where(p_seen_lower_acc, msg.log_no, 0))
 
     replies = ReplyBatch(
-        opcode=op, ts_v=rep_ts_v, ts_m=rep_ts_m, log_no=rep_log,
-        rmw_cnt=rep_rmw_cnt, rmw_sess=rep_rmw_sess, value=rep_value,
-        base_v=rep_base_v, base_m=rep_base_m, val_log=rep_val_log,
+        kind=rep_kind, opcode=op, ts_v=rep_ts_v, ts_m=rep_ts_m,
+        log_no=rep_log, rmw_cnt=rep_rmw_cnt, rmw_sess=rep_rmw_sess,
+        value=rep_value, base_v=rep_base_v, base_m=rep_base_m,
+        val_log=rep_val_log,
     )
     register_mask = c & (msg.rmw_sess >= 0)
     return new_kv, replies, register_mask

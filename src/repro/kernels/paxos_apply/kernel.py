@@ -30,13 +30,13 @@ from repro.core.vector import KVTable, MsgBatch, ReplyBatch, apply_batch
 
 N_KV = len(KVTable._fields)          # 18 state planes
 N_MSG = len(MsgBatch._fields)        # 11 message planes
-N_REP = len(ReplyBatch._fields)      # 10 reply planes
+N_REP = len(ReplyBatch._fields)      # 11 reply planes (kind + opcode + payload)
 
 LANE = 128                           # TPU lane width (minor dim)
 
 
 def _paxos_apply_kernel(*refs):
-    """refs = kv[18], msg[11], is_reg, out_kv[18], out_rep[10], out_mask."""
+    """refs = kv[18], msg[11], is_reg, out_kv[18], out_rep[11], out_mask."""
     kv_refs = refs[:N_KV]
     msg_refs = refs[N_KV:N_KV + N_MSG]
     reg_ref = refs[N_KV + N_MSG]
@@ -68,8 +68,15 @@ def paxos_apply(kv: KVTable, msg: MsgBatch, is_registered: jnp.ndarray,
     handles padding to a multiple of ``block_rows * 128`` and un-padding.
     """
     n = kv.state.shape[0]
-    assert n % (block_rows * LANE) == 0, \
-        f"lane count {n} not a multiple of {block_rows * LANE}"
+    if n % (block_rows * LANE) != 0:
+        raise ValueError(
+            f"paxos_apply: lane count {n} is not a multiple of "
+            f"block_rows * LANE = {block_rows} * {LANE} = "
+            f"{block_rows * LANE}. Padding contract: every KVTable/MsgBatch "
+            f"plane must be 1-D, all of one equal length, padded with NOOP "
+            f"lanes (kind=0) up to a tile multiple — use "
+            f"repro.kernels.paxos_apply.ops.replica_step, which owns the "
+            f"padding/un-padding.")
     rows = n // LANE
     grid = (rows // block_rows,)
 

@@ -3,6 +3,19 @@
 Handles lane padding, the per-session registered-rmw-id gather/scatter (the
 only non-lane-parallel piece of the receiver step), and exposes a full
 "replica step": table' , replies, registry' = step(table, batch, registry).
+
+Padding contract (validated here, *before* trace, and enforced again with a
+``ValueError`` inside :func:`repro.kernels.paxos_apply.kernel.paxos_apply`):
+
+* every ``KVTable`` and ``MsgBatch`` plane is 1-D with one shared lane
+  count ``n`` (slot ``i`` targets key ``i`` — conflict-free batches, see
+  :mod:`repro.core.vector`);
+* ``replica_step`` pads all planes with zeros up to a multiple of
+  ``block_rows * 128``; padded message lanes are ``kind = NOOP`` by
+  construction, so they neither mutate state nor emit replies, and are
+  sliced off again before returning;
+* ``registered`` is the 1-D per-global-session committed-counter table;
+  commit-lane registrations scatter into it *after* the batch.
 """
 
 from __future__ import annotations
@@ -30,22 +43,45 @@ def gather_is_registered(registered: jnp.ndarray,
 
 def scatter_register(registered: jnp.ndarray, msg: MsgBatch,
                      mask: jnp.ndarray) -> jnp.ndarray:
-    """Segment-max registration of committed rmw-ids (§3.1.1)."""
-    sess = jnp.where(mask, msg.rmw_sess, 0)
-    cnt = jnp.where(mask, msg.rmw_cnt, -1)
-    return registered.at[sess].max(cnt)
+    """Segment-max registration of committed rmw-ids (§3.1.1).
+
+    Masked-out lanes must not alias any live global session: they are
+    routed to the one-past-the-end *dead slot* and discarded by the
+    out-of-bounds scatter (``mode="drop"``).  Routing them to session 0
+    with a sentinel counter would silently rely on live counters never
+    being smaller than the sentinel.
+    """
+    dead = registered.shape[0]
+    sess = jnp.where(mask, msg.rmw_sess, dead)
+    return registered.at[sess].max(msg.rmw_cnt, mode="drop")
+
+
+def validate_batch(kv: KVTable, msg: MsgBatch, registered: jnp.ndarray,
+                   block_rows: int) -> None:
+    """Enforce the padding contract before any trace/compile happens."""
+    if block_rows < 1:
+        raise ValueError(f"block_rows must be >= 1, got {block_rows}")
+    n = kv.state.shape[0]
+    for name, plane in list(zip(KVTable._fields, kv)) \
+            + list(zip(MsgBatch._fields, msg)):
+        shape = jnp.shape(plane)
+        if len(shape) != 1 or shape[0] != n:
+            raise ValueError(
+                f"replica_step: plane {name!r} has shape {shape}; the "
+                f"padding contract requires 1-D planes of one shared lane "
+                f"count (here {n}), one lane per key, at most one non-NOOP "
+                f"message per key.")
+    if len(jnp.shape(registered)) != 1:
+        raise ValueError(
+            f"replica_step: registered table must be 1-D (one committed "
+            f"counter per global session), got shape "
+            f"{jnp.shape(registered)}")
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret",
                                              "use_kernel"))
-def replica_step(kv: KVTable, msg: MsgBatch, registered: jnp.ndarray,
-                 *, block_rows: int = 32, interpret: bool = True,
-                 use_kernel: bool = True):
-    """One receiver step of a replica over a conflict-free message batch.
-
-    ``registered`` is the bounded per-global-session table of committed
-    rmw-id counters.  Returns (new_table, replies, new_registered).
-    """
+def _replica_step(kv: KVTable, msg: MsgBatch, registered: jnp.ndarray,
+                  *, block_rows: int, interpret: bool, use_kernel: bool):
     n = kv.state.shape[0]
     tile = block_rows * LANE
     n_pad = ((n + tile - 1) // tile) * tile
@@ -66,3 +102,16 @@ def replica_step(kv: KVTable, msg: MsgBatch, registered: jnp.ndarray,
 
     new_registered = scatter_register(registered, msg, reg_mask)
     return new_kv, replies, new_registered
+
+
+def replica_step(kv: KVTable, msg: MsgBatch, registered: jnp.ndarray,
+                 *, block_rows: int = 32, interpret: bool = True,
+                 use_kernel: bool = True):
+    """One receiver step of a replica over a conflict-free message batch.
+
+    ``registered`` is the bounded per-global-session table of committed
+    rmw-id counters.  Returns (new_table, replies, new_registered).
+    """
+    validate_batch(kv, msg, registered, block_rows)
+    return _replica_step(kv, msg, registered, block_rows=block_rows,
+                         interpret=interpret, use_kernel=use_kernel)

@@ -1,0 +1,52 @@
+"""Linearizability under active fault injection — no hypothesis required.
+
+The fault knobs (drop/dup/heavy-tail) default to 0 in every other non-
+hypothesis test path; these runs keep them strictly positive so the
+carstamp linearizability checker is exercised under real adversarial
+schedules even in environments without the optional `hypothesis` dep
+(tests/test_properties.py skips entirely there).
+"""
+
+import pytest
+
+from repro.core import checkers
+from repro.core.node import ProtocolConfig
+from repro.core.sim import Cluster, NetConfig, workload
+
+PROFILES = [
+    # (seed, drop, dup, heavy_tail_prob)
+    (1, 0.05, 0.00, 0.00),
+    (2, 0.00, 0.08, 0.00),
+    (3, 0.00, 0.00, 0.05),
+    (4, 0.08, 0.05, 0.03),
+    (5, 0.12, 0.10, 0.05),
+]
+
+
+@pytest.mark.parametrize("seed,drop,dup,tail", PROFILES)
+def test_linearizable_under_faults(seed, drop, dup, tail):
+    assert drop + dup + tail > 0, "these runs must keep faults ON"
+    cfg = ProtocolConfig(n_machines=5, sessions_per_machine=2)
+    net = NetConfig(seed=seed, drop_prob=drop, dup_prob=dup,
+                    heavy_tail_prob=tail, heavy_tail_extra=30.0)
+    cl = Cluster(cfg, net)
+    workload(cl, n_ops=60, keys=3, seed=seed, rmw_frac=0.5, write_frac=0.25)
+    assert cl.run_until_quiet(max_ticks=160_000), \
+        "benign-fault run must quiesce"
+    checkers.check_all(cl)
+    assert len(cl.history) == 60
+    if drop + dup > 0:   # heavy-tail-only profiles delay but never drop/dup
+        assert (cl.network.stats["dropped"]
+                + cl.network.stats["duplicated"]) > 0
+
+
+def test_linearizable_under_faults_all_aboard():
+    cfg = ProtocolConfig(n_machines=5, sessions_per_machine=2,
+                         all_aboard=True)
+    net = NetConfig(seed=17, drop_prob=0.05, dup_prob=0.05,
+                    heavy_tail_prob=0.02, heavy_tail_extra=20.0)
+    cl = Cluster(cfg, net)
+    workload(cl, n_ops=50, keys=2, seed=17, rmw_frac=0.5, write_frac=0.3)
+    assert cl.run_until_quiet(max_ticks=160_000)
+    checkers.check_all(cl)
+    assert len(cl.history) == 50

@@ -60,6 +60,46 @@ def test_replica_step_padding_and_registry(n):
     assert (np.asarray(regd_k) >= np.asarray(reg_arr)).all()
 
 
+def test_scatter_register_masked_lanes_hit_dead_slot():
+    """Masked-out lanes must not alias live session 0: with a (protocol-
+    illegal but representable) negative counter in slot 0, the old
+    sentinel-scatter `registered.at[0].max(-1)` would corrupt it."""
+    registered = jnp.array([-5, 2, 7], jnp.int32)
+    n = 8
+    msg = vector.MsgBatch.noop(n)._replace(
+        rmw_sess=jnp.zeros((n,), jnp.int32),
+        rmw_cnt=jnp.full((n,), -1, jnp.int32))
+    mask = jnp.zeros((n,), bool)
+    out = ops.scatter_register(registered, msg, mask)
+    np.testing.assert_array_equal(np.asarray(out), [-5, 2, 7])
+    # and live lanes still register via segment-max
+    mask = mask.at[3].set(True)
+    msg = msg._replace(rmw_sess=msg.rmw_sess.at[3].set(1),
+                       rmw_cnt=msg.rmw_cnt.at[3].set(9))
+    out = ops.scatter_register(registered, msg, mask)
+    np.testing.assert_array_equal(np.asarray(out), [-5, 9, 7])
+
+
+def test_kernel_lane_contract_valueerror():
+    """The padding contract is a ValueError, not a bare assert, and is
+    enforced by replica_step before any trace happens."""
+    n = 100                       # not a multiple of block_rows * 128
+    table = vector.KVTable.create(n)
+    batch = vector.MsgBatch.noop(n)
+    with pytest.raises(ValueError, match="(?i)padding contract"):
+        paxos_apply(table, batch, jnp.zeros((n,), jnp.int32),
+                    block_rows=8, interpret=True)
+    # mismatched plane lengths are rejected by replica_step pre-trace
+    bad = batch._replace(kind=jnp.zeros((n + 1,), jnp.int32))
+    with pytest.raises(ValueError, match="(?i)padding contract"):
+        ops.replica_step(table, bad, jnp.zeros((4,), jnp.int32))
+    with pytest.raises(ValueError, match="block_rows"):
+        ops.replica_step(table, batch, jnp.zeros((4,), jnp.int32),
+                         block_rows=0)
+    with pytest.raises(ValueError, match="registered"):
+        ops.replica_step(table, batch, jnp.zeros((2, 2), jnp.int32))
+
+
 def test_noop_lanes_untouched():
     n = 4096
     table = vector.KVTable.create(n)

@@ -248,3 +248,35 @@ def test_stats_message_flow():
     assert s["sent_propose"] >= 50 * 4       # each RMW: 1 bcast to 4 peers
     assert s["rmw_completed"] == 50
     assert s["net_sent"] == s["net_delivered"] + s["net_dropped"]
+
+
+def test_deliver_to_crashed_machine_counts_as_dropped():
+    """Regression: messages handed to a crashed machine were counted as
+    `delivered` even though Machine.deliver drops them (crash-stop)."""
+    cl = mk(n=3, sess=1, seed=21)
+    cl.crash(1)
+    net = cl.network
+    net.send(0, 1, "to-crashed")
+    net.send(0, 2, "to-alive")
+    delivered = net.deliver_due(net.now + 1_000.0, cl.machines)
+    assert delivered == 1
+    assert net.stats["delivered"] == 1
+    assert net.stats["dropped"] == 1
+    assert net.stats["sent"] == 2
+    assert list(cl.machines[2].inbox) == ["to-alive"]
+    assert not cl.machines[1].inbox
+    cl.machines[2].inbox.clear()             # don't let step() see the stub
+
+
+def test_crashed_minority_run_keeps_delivery_accounting():
+    """End-to-end: with a crashed machine mid-run, sent == delivered +
+    dropped still holds (no dup injection in this profile)."""
+    cl = mk(seed=23)
+    workload(cl, n_ops=30, keys=2, seed=230, rmw_frac=0.6, write_frac=0.2)
+    cl.step(5)
+    cl.crash(4)
+    cl.run_until_quiet(max_ticks=80_000)
+    s = cl.network.stats
+    assert s["dropped"] > 0                  # in-flight msgs to the corpse
+    assert s["sent"] == s["delivered"] + s["dropped"]
+    checkers.check_all(cl)

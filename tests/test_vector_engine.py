@@ -1,9 +1,11 @@
 """Equivalence: vectorized jnp engine == scalar handlers, lane by lane.
 
-Random KV-pair states and random propose/accept/commit messages are applied
-through both paths; the resulting KV state and the reply must agree exactly.
-This is the oracle chain's first link (scalar -> jnp); the second link
-(jnp -> Pallas kernel) is tests/test_kernels_paxos.py.
+Random KV-pair states and random messages over the FULL receiver vocabulary
+(propose/accept/commit + the ABD write-query/write/read-query/read-commit
+lanes) are applied through both paths; the resulting KV state and the reply
+must agree exactly.  This is the oracle chain's first link (scalar -> jnp);
+the second link (jnp -> Pallas kernel) is tests/test_kernels_paxos.py, and
+whole-schedule equivalence is tests/test_replay.py.
 """
 
 import copy
@@ -13,7 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import handlers, vector
+from repro.core import handlers, replay, vector
 from repro.core.handlers import Registry
 from repro.core.types import (
     KVPair, KVState, Msg, MsgKind, Rep, RmwId, TS,
@@ -41,9 +43,20 @@ def random_kv(rng: random.Random, key: int) -> KVPair:
     return kv
 
 
-def random_msg(rng: random.Random, key: int) -> Msg:
-    kind = rng.choice([MsgKind.PROPOSE, MsgKind.ACCEPT, MsgKind.COMMIT])
-    has_value = kind != MsgKind.COMMIT or rng.random() < 0.7
+ALL_KINDS = [MsgKind.PROPOSE, MsgKind.ACCEPT, MsgKind.COMMIT,
+             MsgKind.WRITE_QUERY, MsgKind.WRITE, MsgKind.READ_QUERY,
+             MsgKind.READ_COMMIT]
+
+
+def random_msg(rng: random.Random, key: int,
+               kinds=ALL_KINDS) -> Msg:
+    kind = rng.choice(kinds)
+    if kind in (MsgKind.WRITE_QUERY, MsgKind.READ_QUERY):
+        has_value = False               # queries never carry a value
+    elif kind == MsgKind.COMMIT:
+        has_value = rng.random() < 0.7  # §8.6 thin commits
+    else:
+        has_value = True
     return Msg(
         kind, src=1, key=key,
         ts=TS(rng.randint(0, 7), rng.randint(0, 4)),
@@ -56,33 +69,9 @@ def random_msg(rng: random.Random, key: int) -> Msg:
     )
 
 
-def kv_to_lane(kv: KVPair):
-    return dict(
-        state=int(kv.state), log_no=kv.log_no,
-        last_log=kv.last_committed_log_no,
-        prop_v=kv.proposed_ts.version, prop_m=kv.proposed_ts.mid,
-        acc_v=kv.accepted_ts.version, acc_m=kv.accepted_ts.mid,
-        acc_val=kv.accepted_value,
-        acc_base_v=kv.acc_base_ts.version, acc_base_m=kv.acc_base_ts.mid,
-        rmw_cnt=kv.rmw_id.counter, rmw_sess=kv.rmw_id.gsess,
-        value=kv.value, base_v=kv.base_ts.version, base_m=kv.base_ts.mid,
-        val_log=kv.val_log,
-        last_rmw_cnt=kv.last_committed_rmw_id.counter,
-        last_rmw_sess=kv.last_committed_rmw_id.gsess,
-    )
-
-
-def msg_to_lane(msg: Msg):
-    kind = {MsgKind.PROPOSE: vector.PROPOSE, MsgKind.ACCEPT: vector.ACCEPT,
-            MsgKind.COMMIT: vector.COMMIT}[msg.kind]
-    return dict(
-        kind=kind, ts_v=msg.ts.version, ts_m=msg.ts.mid, log_no=msg.log_no,
-        rmw_cnt=msg.rmw_id.counter, rmw_sess=msg.rmw_id.gsess,
-        value=msg.value if msg.value is not None else 0,
-        base_v=msg.base_ts.version, base_m=msg.base_ts.mid,
-        val_log=msg.val_log,
-        has_value=0 if msg.value is None else 1,
-    )
+# the canonical scalar<->lane converters live beside the replay harness
+kv_to_lane = replay.kv_to_lanes
+msg_to_lane = replay.msg_to_lanes
 
 
 def build_batch(kvs, msgs, registry):
@@ -97,11 +86,7 @@ def build_batch(kvs, msgs, registry):
 
 
 def scalar_apply(kv: KVPair, msg: Msg, registry: Registry):
-    if msg.kind == MsgKind.PROPOSE:
-        return handlers.on_propose(kv, msg, registry)
-    if msg.kind == MsgKind.ACCEPT:
-        return handlers.on_accept(kv, msg, registry)
-    return handlers.on_commit(kv, msg, registry)
+    return handlers.apply_msg(kv, msg, registry)
 
 
 @pytest.mark.parametrize("seed", range(8))
@@ -138,6 +123,8 @@ def test_vector_matches_scalar(seed):
         assert rep_op[i] == int(rep.opcode), (
             f"lane {i}: opcode {Rep(int(rep_op[i])).name} != "
             f"{rep.opcode.name} for {msgs[i]} on {kvs[i]}")
+        assert int(np.asarray(replies.kind)[i]) == int(rep.kind), (
+            f"lane {i}: reply kind diverged for {msgs[i]}")
         # payload checks for the payload-bearing opcodes
         if rep.opcode in (Rep.SEEN_HIGHER_PROP, Rep.SEEN_HIGHER_ACC):
             assert (int(np.asarray(replies.ts_v)[i]),
@@ -149,16 +136,48 @@ def test_vector_matches_scalar(seed):
         if rep.opcode == Rep.LOG_TOO_LOW:
             assert int(np.asarray(replies.log_no)[i]) == rep.log_no
             assert int(np.asarray(replies.value)[i]) == rep.value
+        if rep.opcode == Rep.CARSTAMP_TOO_LOW:
+            assert int(np.asarray(replies.value)[i]) == rep.value
+            assert (int(np.asarray(replies.base_v)[i]),
+                    int(np.asarray(replies.base_m)[i])) == rep.base_ts
+            assert int(np.asarray(replies.val_log)[i]) == rep.val_log
+            assert int(np.asarray(replies.log_no)[i]) == rep.log_no
+            assert (int(np.asarray(replies.rmw_cnt)[i]),
+                    int(np.asarray(replies.rmw_sess)[i])) == rep.rmw_id
+        if rep.kind == MsgKind.WRITE_QUERY_REPLY:
+            assert (int(np.asarray(replies.base_v)[i]),
+                    int(np.asarray(replies.base_m)[i])) == rep.base_ts
 
 
 def test_registry_scatter_semantics():
-    """Commit lanes report (cnt, sess) for a segment-max registry update."""
+    """Commit-semantics lanes (COMMIT and READ_COMMIT write-backs) report
+    (cnt, sess) for a segment-max registry update; no other kind does."""
     rng = random.Random(3)
-    kvs = [random_kv(rng, i) for i in range(32)]
-    msgs = [random_msg(rng, i) for i in range(32)]
+    kvs = [random_kv(rng, i) for i in range(64)]
+    msgs = [random_msg(rng, i) for i in range(64)]
     registry = Registry(N_SESS)
     table, batch, is_reg = build_batch(kvs, msgs, registry)
     _, _, reg_mask = vector.apply_batch(table, batch, is_reg)
     reg_mask = np.asarray(reg_mask)
     for i, m in enumerate(msgs):
-        assert bool(reg_mask[i]) == (m.kind == MsgKind.COMMIT)
+        assert bool(reg_mask[i]) == (m.kind in (MsgKind.COMMIT,
+                                                MsgKind.READ_COMMIT))
+
+
+def test_abd_lanes_leave_consensus_state_untouched():
+    """ABD lanes must never touch proposed/accepted state — that is the
+    whole point of the paper's consensus-bypassing common case."""
+    rng = random.Random(11)
+    kvs = [random_kv(rng, i) for i in range(128)]
+    msgs = [random_msg(rng, i, kinds=[MsgKind.WRITE_QUERY, MsgKind.WRITE,
+                                      MsgKind.READ_QUERY])
+            for i in range(128)]
+    table, batch, is_reg = build_batch(kvs, msgs, Registry(N_SESS))
+    new_table, _, reg_mask = vector.apply_batch(table, batch, is_reg)
+    for f in ("state", "log_no", "last_log", "prop_v", "prop_m", "acc_v",
+              "acc_m", "acc_val", "acc_base_v", "acc_base_m", "rmw_cnt",
+              "rmw_sess", "last_rmw_cnt", "last_rmw_sess"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(new_table, f)), np.asarray(getattr(table, f)),
+            err_msg=f"ABD lane mutated consensus plane {f}")
+    assert not np.asarray(reg_mask).any()
