@@ -15,8 +15,15 @@ of that op's receiver rounds:
 which reproduces the paper's op-class ordering CP < All-aboard <= write
 << read at the SIMD layer (reads/writes bypass consensus entirely).
 
+The **issuer lane** benchmarks the other half of a machine: replies/second
+through the batched proposer engine
+(:func:`repro.core.proposer_vector.proposer_step` — tallies, quorum
+arbitration and emissions over session lanes).
+
 ``--smoke`` runs tiny shapes through the Pallas kernel in interpret mode
-with a kernel-vs-oracle equality check — wired into scripts/check.sh.
+with a kernel-vs-oracle equality check — wired into scripts/check.sh —
+and writes the results as machine-readable JSON (``BENCH_smoke.json`` by
+default; uploaded as a CI artifact to seed the perf trajectory).
 """
 
 from __future__ import annotations
@@ -29,7 +36,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import vector
+from repro.core import proposer_vector, vector
+from repro.core.proposer import AbdPhase, Phase
 from repro.core.types import TS, Msg, MsgKind, RmwId
 from repro.kernels.paxos_apply import ops
 
@@ -176,6 +184,66 @@ def bench_op_classes_checked(n_keys: int, iters: int = 20,
                      f"{attempts} re-measurements: {rows}")
 
 
+def random_issuer_tables(n, seed=0, n_machines=5):
+    """Random issuer lanes mid-round + one matching live reply per lane."""
+    rng = np.random.default_rng(seed)
+    z = lambda lo, hi: jnp.asarray(rng.integers(lo, hi, n), jnp.int32)
+    lanes = {f: jnp.full((n,), v, jnp.int32)
+             for f, v in proposer_vector.TABLE_DEFAULTS.items()}
+    phase = jnp.asarray(rng.choice([int(Phase.PROPOSED), int(Phase.ACCEPTED),
+                                    int(Phase.COMMITTED)], n), jnp.int32)
+    lanes.update(
+        phase=phase, lid=jnp.ones((n,), jnp.int32),
+        aboard=z(0, 2), helping=z(0, 2), key=z(0, 4), ts_v=z(2, 7),
+        ts_m=z(0, n_machines), log_no=z(1, 5), rmw_cnt=z(1, 5),
+        rmw_sess=z(0, N_GSESS), value=z(0, 100), has_value=z(0, 2),
+        base_v=z(0, 3), base_m=z(0, n_machines), val_log=z(0, 4),
+        rep_bits=z(0, 4), ack_bits=z(0, 2),
+        abd_phase=jnp.asarray(rng.choice([int(AbdPhase.W_QUERY),
+                                          int(AbdPhase.R_QUERY)], n),
+                              jnp.int32),
+        abd_lid=jnp.ones((n,), jnp.int32), abd_key=z(0, 4),
+        abd_value=z(0, 100))
+    table = proposer_vector.ProposerTable(
+        *[lanes[f] for f in proposer_vector.ProposerTable._fields])
+    reply_kind = jnp.where(
+        phase == int(Phase.PROPOSED), int(MsgKind.PROP_REPLY),
+        jnp.where(phase == int(Phase.ACCEPTED), int(MsgKind.ACC_REPLY),
+                  int(MsgKind.COMMIT_ACK)))
+    reps = {f: jnp.zeros((n,), jnp.int32)
+            for f in proposer_vector.IssuerReplyBatch._fields}
+    reps.update(
+        kind=reply_kind, opcode=z(0, 9), src=z(0, n_machines),
+        lid=jnp.ones((n,), jnp.int32), ts_v=z(0, 7), ts_m=z(0, n_machines),
+        log_no=z(0, 5), rmw_cnt=z(1, 5), rmw_sess=z(0, N_GSESS),
+        value=z(0, 100), base_v=z(0, 3), base_m=z(0, n_machines),
+        val_log=z(0, 4))
+    batch = proposer_vector.IssuerReplyBatch(
+        *[reps[f] for f in proposer_vector.IssuerReplyBatch._fields])
+    return table, batch
+
+
+def bench_issuer(n_lanes: int, iters: int = 30, n_machines: int = 5,
+                 repeats: int = 3):
+    """Replies/second through the batched proposer step (issuer half)."""
+    table, batch = random_issuer_tables(n_lanes, n_machines=n_machines)
+    kw = dict(n_machines=n_machines, majority=n_machines // 2 + 1,
+              commit_need=n_machines // 2, log_too_high_threshold=4)
+    step = lambda t: proposer_vector.proposer_step(t, batch, **kw)[0]
+    t0 = step(table)
+    jax.block_until_ready(t0)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.time()
+        for _ in range(iters):
+            out = step(table)        # fixed input: steady-state fold cost
+        jax.block_until_ready(out)
+        best = min(best, (time.time() - t0) / iters)
+    return {"n_lanes": n_lanes, "impl": "jnp",
+            "replies_per_s": round(n_lanes / best),
+            "us_per_batch": round(best * 1e6)}
+
+
 def check_kernel_matches_oracle(n_keys: int = 256, seed: int = 5):
     """One mixed full-vocabulary batch: Pallas (interpret) == pure jnp."""
     kv, msg, reg = random_tables(n_keys, seed=seed)
@@ -194,21 +262,47 @@ def main(argv=None):
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument("--smoke", action="store_true",
                         help="tiny shapes, Pallas interpret mode, "
-                             "kernel-vs-oracle check (CI gate)")
+                             "kernel-vs-oracle check (CI gate); writes "
+                             "machine-readable results to --json")
+    parser.add_argument("--json", default=None, metavar="PATH",
+                        help="write results as JSON (default for --smoke: "
+                             "BENCH_smoke.json, seeding the CI perf "
+                             "trajectory artifact)")
     args = parser.parse_args(argv)
 
     if args.smoke:
         check_kernel_matches_oracle()
-        rows = {"throughput": [bench(256, iters=5, use_kernel=True)],
-                "op_classes": bench_op_classes_checked(256, iters=20,
-                                                       use_kernel=True)}
+        n = 256
+        rows = {
+            "schema": 1,
+            "mode": "smoke",
+            "impl": "pallas",
+            "interpret": True,
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "shapes": {"n_keys": n, "n_issuer_lanes": n, "block_rows": 32},
+            "throughput": [bench(n, iters=5, use_kernel=True)],
+            "op_classes": bench_op_classes_checked(n, iters=20,
+                                                   use_kernel=True),
+            "issuer": [bench_issuer(n, iters=10)],
+        }
+        out = args.json or "BENCH_smoke.json"
+        with open(out, "w") as fh:
+            json.dump(rows, fh, indent=1)
         print(json.dumps(rows, indent=1))
-        print("smoke OK: kernel == oracle, op-class ordering holds")
+        print(f"smoke OK: kernel == oracle, op-class ordering holds "
+              f"({out} written)")
         return rows
 
-    rows = {"throughput": [bench(n) for n in (4096, 65_536, 1_048_576)]}
+    rows = {"schema": 1, "mode": "full", "interpret": True,
+            "jax": jax.__version__, "backend": jax.default_backend(),
+            "throughput": [bench(n) for n in (4096, 65_536, 1_048_576)]}
     rows["throughput"].append(bench(65_536, iters=3, use_kernel=True))
     rows["op_classes"] = bench_op_classes_checked(65_536)
+    rows["issuer"] = [bench_issuer(n) for n in (4096, 65_536)]
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(rows, fh, indent=1)
     print(json.dumps(rows, indent=1))
     return rows
 

@@ -17,7 +17,6 @@ Demonstrates the full integration the paper's technique enables:
 import argparse
 import shutil
 
-import jax
 
 from repro.coord.registry import PaxosRegistry
 from repro.data.pipeline import DataConfig

@@ -6,5 +6,13 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -q "$@"
 # SIMD-engine smoke: tiny shapes, Pallas interpret mode, kernel-vs-oracle
-# equality and the paper's op-class ordering (see benchmarks/bench_vector.py)
+# equality, the paper's op-class ordering and the issuer lane (see
+# benchmarks/bench_vector.py); writes BENCH_smoke.json, which CI uploads
+# as the perf-trajectory artifact (.github/workflows/ci.yml)
 python benchmarks/bench_vector.py --smoke
+# Lint gate (mirrors CI's lint job); skipped when ruff isn't installed
+if command -v ruff >/dev/null 2>&1; then
+  ruff check .
+else
+  echo "check.sh: ruff not installed, skipping lint (CI runs it)"
+fi

@@ -7,7 +7,6 @@ the dry-run (ShapeDtypeStruct, no allocation).
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict
 
 from repro.models.config import ModelConfig

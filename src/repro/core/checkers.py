@@ -26,7 +26,7 @@ from typing import Dict, List, Tuple
 
 from .node import ReqKind
 from .sim import Cluster
-from .types import CS_ZERO, Carstamp, RmwId, RmwOp, apply_rmw
+from .types import CS_ZERO, Carstamp, RmwId, apply_rmw
 
 
 class SafetyViolation(AssertionError):

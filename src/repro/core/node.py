@@ -19,12 +19,16 @@ import enum
 from collections import deque
 from typing import Callable, Deque, Dict, List, Optional, Tuple
 
-from . import handlers
+from . import handlers, proposer
 from .handlers import Registry, commit_to_kv, get_kv
+from .proposer import (
+    AbdEntry, AbdPhase, AbdRound, Decision, DecisionEvent, PauseEvent, Phase,
+    ReplyEvent, RmwRound,
+)
 from .types import (
-    ALL_ABOARD_VERSION, CS_ZERO, Carstamp, FIRST_PROPOSE_VERSION, HelpFlag,
-    KVPair, KVState, LEState, LocalEntry, Msg, MsgKind, Rep, Reply, RmwId,
-    RmwOp, TS, TS_ZERO, Tally, apply_rmw,
+    ALL_ABOARD_VERSION, Carstamp, FIRST_PROPOSE_VERSION, HelpFlag,
+    KVPair, KVState, LEState, LocalEntry, Msg, MsgKind, Rep, Reply,
+    RmwId, RmwOp, TS, TS_ZERO, apply_rmw,
 )
 
 
@@ -82,38 +86,9 @@ class Completion:
     rmw_id: RmwId = dataclasses.field(default_factory=lambda: RmwId(0, -1))
 
 
-# ---------------------------------------------------------------------------
-# ABD per-session entries (§10–§11)
-# ---------------------------------------------------------------------------
-
-class AbdPhase(enum.IntEnum):
-    IDLE = 0
-    W_QUERY = 1
-    W_WRITE = 2
-    R_QUERY = 3
-    R_COMMIT = 4
-
-
-@dataclasses.dataclass
-class AbdEntry:
-    sess: int
-    phase: AbdPhase = AbdPhase.IDLE
-    key: int = 0
-    value: int = 0
-    lid: int = 0
-    # per-source reply sets: duplicated replies must not fake quorums
-    repliers: set = dataclasses.field(default_factory=set)
-    ackers: set = dataclasses.field(default_factory=set)
-    max_base: TS = TS_ZERO
-    # read state
-    sent_cs: Carstamp = CS_ZERO          # carstamp the READ_QUERY carried
-    best_cs: Carstamp = CS_ZERO
-    best_value: int = 0
-    best_log_no: int = 0
-    best_rmw_id: RmwId = dataclasses.field(default_factory=lambda: RmwId(0, -1))
-    storers: set = dataclasses.field(default_factory=set)  # who stores best_cs
-    round_age: int = 0
-    tag: int = 0
+# ABD per-session entries (§10–§11) live in repro.core.proposer (AbdEntry /
+# AbdPhase are re-exported here for compatibility): the issuer-side tally
+# transitions are pure and shared with the batched proposer engine.
 
 
 class Machine:
@@ -159,8 +134,26 @@ class Machine:
         # appended (in processing order) before it is applied — the input of
         # the differential trace-replay harness (repro.core.replay).
         self.msg_trace: Optional[List[Msg]] = None
+        # issuer-side event tap (round starts, steered replies, decisions,
+        # pauses — see repro.core.proposer): the input+oracle of the
+        # differential *proposer* replay (repro.core.replay).
+        self.issuer_trace: Optional[List[object]] = None
 
     # -- infrastructure ------------------------------------------------------
+
+    def _trace_reply(self, sess: int, rep: Reply) -> None:
+        if self.issuer_trace is not None:
+            self.issuer_trace.append(
+                ReplyEvent(sess, dataclasses.replace(rep)))
+
+    def _trace_pause(self, sess: int, abd: int = 0) -> None:
+        if self.issuer_trace is not None:
+            self.issuer_trace.append(PauseEvent(sess, abd))
+
+    def _trace_decision(self, sess: int, d: Decision,
+                        payload: Optional[dict] = None) -> None:
+        if self.issuer_trace is not None:
+            self.issuer_trace.append(DecisionEvent(sess, d, payload))
 
     def bump(self, stat: str, n: int = 1) -> None:
         self.stats[stat] = self.stats.get(stat, 0) + n
@@ -264,6 +257,7 @@ class Machine:
         sess = rep.lid & 0xFFFF
         if sess >= self.cfg.sessions_per_machine:
             return
+        self._trace_reply(sess, rep)
         if rep.kind in (MsgKind.WRITE_QUERY_REPLY, MsgKind.WRITE_ACK,
                         MsgKind.READ_QUERY_REPLY):
             self._abd_reply(self.abd[sess], rep)
@@ -375,17 +369,38 @@ class Machine:
             le.helping_flag = HelpFlag.PROPOSE_LOCALLY_ACCEPTED
             self.bump("help_after_wait")
             self._bcast_proposes(le, local_ack=False)
-            le.tally.note(Reply(MsgKind.PROP_REPLY, self.mid,
-                                Rep.SEEN_LOWER_ACC, le.lid, key=le.key,
-                                ts=kv.accepted_ts, rmw_id=kv.rmw_id,
-                                value=kv.accepted_value,
-                                base_ts=kv.acc_base_ts, val_log=kv.log_no))
+            self._note_local(le, Reply(MsgKind.PROP_REPLY, self.mid,
+                                       Rep.SEEN_LOWER_ACC, le.lid, key=le.key,
+                                       ts=kv.accepted_ts, rmw_id=kv.rmw_id,
+                                       value=kv.accepted_value,
+                                       base_ts=kv.acc_base_ts,
+                                       val_log=kv.log_no))
 
     def _all_responsive(self) -> bool:
         """§9.2 final note: skip All-aboard if any peer has been quiet."""
         now = self._now()
         return all(now - t <= self.cfg.suspect_timeout
                    for m, t in enumerate(self.last_heard) if m != self.mid)
+
+    def _note_local(self, le: LocalEntry, rep: Reply) -> None:
+        """A synthetic local reply (§4.6 implicit ack, §5/§8.4 self-notes):
+        traced like any steered reply, then folded into the tally."""
+        self._trace_reply(le.sess, rep)
+        le.tally.note(rep)
+
+    def _trace_rmw_round(self, le: LocalEntry, phase: Phase, *, ts: TS,
+                         log_no: int, rmw_id: RmwId, value: Optional[int],
+                         base_ts: TS, val_log: int, aboard: bool = False,
+                         helping: bool = False) -> None:
+        if self.issuer_trace is None:
+            return
+        self.issuer_trace.append(RmwRound(
+            sess=le.sess, phase=phase, lid=le.lid, key=le.key, ts=ts,
+            log_no=log_no, rmw_id=rmw_id,
+            value=0 if value is None else value,
+            has_value=0 if value is None else 1,
+            base_ts=base_ts, val_log=val_log, aboard=int(aboard),
+            helping=int(helping), lth_counter=le.log_too_high_counter))
 
     def _bcast_proposes(self, le: LocalEntry, local_ack: bool) -> None:
         le.state = LEState.PROPOSED
@@ -394,14 +409,17 @@ class Machine:
         le.all_aboard = False
         le.tally.reset(le.lid, self.cfg.n_machines)
         kv = get_kv(self.kvs, le.key)
+        self._trace_rmw_round(le, Phase.PROPOSED, ts=le.ts, log_no=le.log_no,
+                              rmw_id=le.rmw_id, value=0, base_ts=kv.base_ts,
+                              val_log=kv.val_log)
         self._broadcast(Msg(MsgKind.PROPOSE, self.mid, key=le.key, ts=le.ts,
                             log_no=le.log_no, rmw_id=le.rmw_id,
                             base_ts=kv.base_ts, val_log=kv.val_log,
                             lid=le.lid))
         if local_ack:
             # The local KVS's reply (we already hold the pair): a plain Ack.
-            le.tally.note(Reply(MsgKind.PROP_REPLY, self.mid, Rep.ACK, le.lid,
-                                key=le.key))
+            self._note_local(le, Reply(MsgKind.PROP_REPLY, self.mid, Rep.ACK,
+                                       le.lid, key=le.key))
 
     # -- All-aboard fast path (§9) -------------------------------------------------
 
@@ -415,8 +433,7 @@ class Machine:
         le.all_aboard_timeout_counter = 0
         self.bump("all_aboard_attempts")
         self._bcast_accepts(le, value=le.accepted_value, rmw_id=le.rmw_id,
-                            base_ts=le.base_ts)
-        le.all_aboard = True   # _bcast_accepts resets the flag; restore it
+                            base_ts=le.base_ts, aboard=True)
 
     # -- local accept (§8.5) --------------------------------------------------------
 
@@ -500,64 +517,76 @@ class Machine:
         return True
 
     def _bcast_accepts(self, le: LocalEntry, *, value: int, rmw_id: RmwId,
-                       base_ts: TS) -> None:
+                       base_ts: TS, aboard: bool = False) -> None:
         le.state = LEState.ACCEPTED
         le.lid = self._new_lid(le.sess)
         le.round_age = 0
-        le.all_aboard = False
+        le.all_aboard = aboard
         le.tally.reset(le.lid, self.cfg.n_machines)
+        self._trace_rmw_round(le, Phase.ACCEPTED, ts=le.ts, log_no=le.log_no,
+                              rmw_id=rmw_id, value=value, base_ts=base_ts,
+                              val_log=le.log_no, aboard=aboard,
+                              helping=le.helping_flag == HelpFlag.HELPING)
         self._broadcast(Msg(MsgKind.ACCEPT, self.mid, key=le.key, ts=le.ts,
                             log_no=le.log_no, rmw_id=rmw_id, value=value,
                             base_ts=base_ts, val_log=le.log_no, lid=le.lid))
         # Local accept already happened -> implicit local Ack (§4.6).
-        le.tally.note(Reply(MsgKind.ACC_REPLY, self.mid, Rep.ACK, le.lid,
-                            key=le.key))
+        self._note_local(le, Reply(MsgKind.ACC_REPLY, self.mid, Rep.ACK,
+                                   le.lid, key=le.key))
 
     # -- propose replies (§4.3) -----------------------------------------------------
 
+    # decision payload builders are shared with the replay shadow:
+    _retry_payload = staticmethod(proposer.retry_payload)
+    _ltl_payload = staticmethod(proposer.log_too_low_payload)
+    _help_payload = staticmethod(proposer.lower_acc_payload)
+
     def _check_propose_replies(self, le: LocalEntry) -> None:
         t = le.tally
-        triggered = (t.rmw_committed or t.log_too_low is not None
-                     or t.seen_higher is not None
-                     or t.total >= self.cfg.majority)
-        if not triggered:
+        d, payload = proposer.decide_propose(
+            t, majority=self.cfg.majority, own_rmw_id=le.rmw_id,
+            log_too_high_counter=le.log_too_high_counter,
+            log_too_high_threshold=self.cfg.log_too_high_threshold)
+        if d == Decision.WAIT:
+            # Majority of replies but no decision (e.g. mixed acks below
+            # quorum): wait for stragglers; the retransmit timer resolves
+            # true losses.
             return
-        if t.rmw_committed:
-            self._on_learned_committed(le, no_bcast=t.rmw_committed_no_bcast)
-            return
-        if t.log_too_low is not None:
-            self._apply_log_too_low(le, t.log_too_low)
-            return
-        if t.seen_higher is not None:
+        if d in (Decision.LEARNED, Decision.LEARNED_NO_BCAST):
+            self._trace_decision(le.sess, d)
+            self._on_learned_committed(
+                le, no_bcast=d == Decision.LEARNED_NO_BCAST)
+        elif d == Decision.LOG_TOO_LOW:
+            self._trace_decision(le.sess, d, self._ltl_payload(payload))
+            self._apply_log_too_low(le, payload)
+        elif d == Decision.RETRY:
+            self._trace_decision(le.sess, d, self._retry_payload(t))
             le.retry_version = max(le.retry_version, t.seen_higher.version + 1)
             self._enter_retry(le)
-            return
-        if t.acks >= self.cfg.majority:
+        elif d == Decision.LOCAL_ACCEPT:
+            self._trace_decision(le.sess, d)
             self._local_accept_own(le)
-            return
-        if t.lower_acc is not None:
-            self._begin_help(le, t.lower_acc)
-            return
-        if t.log_too_high:
+        elif d in (Decision.HELP, Decision.HELP_SELF):
+            self._trace_decision(le.sess, d, self._help_payload(payload))
+            self._begin_help(le, payload)
+        elif d == Decision.RECOMMIT:
+            # §8.7: the previous slot's commit may have been lost with its
+            # issuer; re-broadcast it from our local last-committed state.
+            self._trace_decision(le.sess, d)
+            le.log_too_high_counter = 0
+            kv = get_kv(self.kvs, le.key)
+            le.help.rmw_id = kv.last_committed_rmw_id
+            le.help.value = kv.value
+            le.help.base_ts = kv.base_ts
+            le.help.log_no = kv.last_committed_log_no
+            le.help.val_log = kv.val_log
+            le.state = LEState.BCAST_COMMITS_FROM_HELP
+            le.all_acked = False
+            self.bump("log_too_high_recommit")
+        elif d == Decision.RETRY_LOG_TOO_HIGH:
+            self._trace_decision(le.sess, d)
             le.log_too_high_counter += 1
-            if le.log_too_high_counter >= self.cfg.log_too_high_threshold:
-                # §8.7: the previous slot's commit may have been lost with its
-                # issuer; re-broadcast it from our local last-committed state.
-                le.log_too_high_counter = 0
-                kv = get_kv(self.kvs, le.key)
-                le.help.rmw_id = kv.last_committed_rmw_id
-                le.help.value = kv.value
-                le.help.base_ts = kv.base_ts
-                le.help.log_no = kv.last_committed_log_no
-                le.help.val_log = kv.val_log
-                le.state = LEState.BCAST_COMMITS_FROM_HELP
-                le.all_acked = False
-                self.bump("log_too_high_recommit")
-                return
             self._enter_retry(le)
-            return
-        # Majority of replies but no decision (e.g. mixed acks below quorum):
-        # wait for stragglers; the retransmit timer resolves true losses.
 
     def _begin_help(self, le: LocalEntry, rep: Reply) -> None:
         """§6: help the accept with the highest accepted-TS."""
@@ -591,50 +620,65 @@ class Machine:
 
     # -- accept replies (§4.6, §9.2) ---------------------------------------------------
 
+    def _commit_bcast_payload(self, le: LocalEntry, helping: bool,
+                              all_acked: bool) -> dict:
+        if helping:
+            log_no, rmw_id = le.help.log_no, le.help.rmw_id
+            value, base_ts, val_log = (le.help.value, le.help.base_ts,
+                                       le.help.val_log)
+        else:
+            log_no, rmw_id = le.accepted_log_no, le.rmw_id
+            value, base_ts, val_log = (le.accepted_value, le.base_ts,
+                                       le.accepted_log_no)
+        return {"log_no": log_no, "rmw_cnt": rmw_id.counter,
+                "rmw_sess": rmw_id.gsess,
+                "value": 0 if all_acked else value,
+                "has_value": 0 if all_acked else 1,
+                "base_v": base_ts.version, "base_m": base_ts.mid,
+                "val_log": val_log}
+
     def _check_accept_replies(self, le: LocalEntry) -> None:
         t = le.tally
         helping = le.helping_flag == HelpFlag.HELPING
-        any_nack = (t.rmw_committed or t.log_too_low is not None
-                    or t.seen_higher is not None or t.log_too_high)
-        triggered = (t.rmw_committed or t.log_too_low is not None
-                     or t.total >= self.cfg.majority
-                     or ((helping or le.all_aboard) and any_nack))
-        if not triggered:
+        d, payload = proposer.decide_accept(
+            t, n_machines=self.cfg.n_machines, majority=self.cfg.majority,
+            helping=helping, all_aboard=le.all_aboard)
+        if d == Decision.WAIT:
+            # majority replied, only acks but below the required quorum
+            # (all-aboard waiting for everyone): handled by inspection
+            # timeouts.
             return
-        if t.rmw_committed:
-            if helping:
-                self._stop_helping(le)       # h-RMW already committed (§8.5)
-            else:
-                self._on_learned_committed(le,
-                                           no_bcast=t.rmw_committed_no_bcast)
-            return
-        if t.log_too_low is not None:
-            self._apply_log_too_low(le, t.log_too_low)
-            return
-        need = self.cfg.n_machines if le.all_aboard else self.cfg.majority
-        if t.acks >= need:
+        if d == Decision.STOP_HELP:
+            # h-RMW already committed (§8.5), or any nack cancels help (§4.6)
+            self._trace_decision(le.sess, d)
+            self._stop_helping(le)
+        elif d in (Decision.LEARNED, Decision.LEARNED_NO_BCAST):
+            self._trace_decision(le.sess, d)
+            self._on_learned_committed(
+                le, no_bcast=d == Decision.LEARNED_NO_BCAST)
+        elif d == Decision.LOG_TOO_LOW:
+            self._trace_decision(le.sess, d, self._ltl_payload(payload))
+            self._apply_log_too_low(le, payload)
+        elif d == Decision.COMMIT_BCAST:
             le.all_acked = t.acks >= self.cfg.n_machines
+            self._trace_decision(le.sess, d, self._commit_bcast_payload(
+                le, helping, le.all_acked))
             if le.all_aboard and le.all_acked:
                 self.bump("all_aboard_successes")
             le.state = (LEState.BCAST_COMMITS_FROM_HELP if helping
                         else LEState.BCAST_COMMITS)
             le.round_age = 0
-            return
-        if any_nack:
-            if helping:
-                self._stop_helping(le)       # any nack cancels help (§4.6)
-                return
+        elif d == Decision.RETRY:
+            self._trace_decision(le.sess, d, self._retry_payload(t))
             if t.seen_higher is not None:
                 le.retry_version = max(le.retry_version,
                                        t.seen_higher.version + 1)
             if le.all_aboard:
                 self.bump("all_aboard_fallbacks")
             self._enter_retry(le)
-            return
-        # majority replied, only acks but below the required quorum
-        # (all-aboard waiting for everyone): handled by inspection timeouts.
 
     def _stop_helping(self, le: LocalEntry) -> None:
+        self._trace_pause(le.sess)
         le.helping_flag = HelpFlag.NOT_HELPING
         le.state = LEState.NEEDS_KV
         le.back_off_counter = 0
@@ -702,6 +746,7 @@ class Machine:
         plus a machine-id stagger guarantees one of them eventually runs a
         full round uncontended.
         """
+        self._trace_pause(le.sess)
         le.state = LEState.RETRY_WITH_HIGHER_TS
         le.round_age = 0
         le.retry_count += 1
@@ -738,11 +783,12 @@ class Machine:
             kv.proposed_ts = le.ts
             le.helping_flag = HelpFlag.PROPOSE_LOCALLY_ACCEPTED
             self._bcast_proposes(le, local_ack=False)
-            le.tally.note(Reply(MsgKind.PROP_REPLY, self.mid,
-                                Rep.SEEN_LOWER_ACC, le.lid, key=le.key,
-                                ts=kv.accepted_ts, rmw_id=kv.rmw_id,
-                                value=kv.accepted_value,
-                                base_ts=kv.acc_base_ts, val_log=kv.log_no))
+            self._note_local(le, Reply(MsgKind.PROP_REPLY, self.mid,
+                                       Rep.SEEN_LOWER_ACC, le.lid, key=le.key,
+                                       ts=kv.accepted_ts, rmw_id=kv.rmw_id,
+                                       value=kv.accepted_value,
+                                       base_ts=kv.acc_base_ts,
+                                       val_log=kv.log_no))
             return
         le.state = LEState.NEEDS_KV
         le.back_off_counter = 0
@@ -765,6 +811,9 @@ class Machine:
         le.lid = self._new_lid(le.sess)
         le.round_age = 0
         le.tally.reset(le.lid, self.cfg.n_machines - 1)
+        self._trace_rmw_round(le, Phase.COMMITTED, ts=TS_ZERO, log_no=log_no,
+                              rmw_id=rmw_id, value=wire_value,
+                              base_ts=base_ts, val_log=val_log)
         self._broadcast(Msg(MsgKind.COMMIT, self.mid, key=le.key,
                             log_no=log_no, rmw_id=rmw_id, value=wire_value,
                             base_ts=base_ts, val_log=val_log, lid=le.lid))
@@ -773,10 +822,12 @@ class Machine:
 
     def _check_commit_acks(self, le: LocalEntry) -> None:
         # §8.7: apply the commit locally only after (a majority of) acks.
-        need = (self.cfg.majority - 1
-                if self.cfg.commit_ack_quorum_is_majority else 1)
-        if le.tally.acks < need:
+        d = proposer.decide_commit(
+            le.tally, majority=self.cfg.majority,
+            quorum_is_majority=self.cfg.commit_ack_quorum_is_majority)
+        if d == Decision.WAIT:
             return
+        self._trace_decision(le.sess, d)
         kv = get_kv(self.kvs, le.key)
         if not le.commit_from_help:
             commit_to_kv(kv, self.registry, log_no=le.accepted_log_no,
@@ -855,6 +906,23 @@ class Machine:
     # ABD writes (§10) and reads (§11)
     # =================================================================
 
+    def _trace_abd_round(self, ab: AbdEntry, *, rep_bits: int = 0,
+                         store_bits: int = 0) -> None:
+        if self.issuer_trace is None:
+            return
+        self.issuer_trace.append(AbdRound(
+            sess=ab.sess, phase=ab.phase, lid=ab.lid, key=ab.key,
+            value=(ab.best_value if ab.phase in (AbdPhase.R_QUERY,
+                                                 AbdPhase.R_COMMIT)
+                   else ab.value),
+            base_ts=(ab.best_cs.base if ab.phase in (AbdPhase.R_QUERY,
+                                                     AbdPhase.R_COMMIT)
+                     else ab.max_base),
+            val_log=ab.best_cs.log_no,
+            sent_base_ts=ab.sent_cs.base, sent_val_log=ab.sent_cs.log_no,
+            log_no=ab.best_log_no, rmw_id=ab.best_rmw_id,
+            rep_bits=rep_bits, store_bits=store_bits))
+
     def _start_write(self, sess: int, req: Request) -> None:
         ab = self.abd[sess]
         ab.__init__(sess=sess)
@@ -865,6 +933,7 @@ class Machine:
         ab.max_base = kv.base_ts
         ab.repliers = {self.mid}                     # local reply
         self.bump("writes_started")
+        self._trace_abd_round(ab, rep_bits=1 << self.mid)
         self._broadcast(Msg(MsgKind.WRITE_QUERY, self.mid, key=req.key,
                             lid=ab.lid))
 
@@ -883,48 +952,44 @@ class Machine:
         ab.repliers = {self.mid}
         ab.storers = {self.mid}                      # we store it ourselves
         self.bump("reads_started")
+        self._trace_abd_round(ab, rep_bits=1 << self.mid,
+                              store_bits=1 << self.mid)
         self._broadcast(Msg(MsgKind.READ_QUERY, self.mid, key=req.key,
                             base_ts=kv.base_ts, val_log=kv.val_log,
                             lid=ab.lid))
 
     def _abd_reply(self, ab: AbdEntry, rep: Reply) -> None:
-        if ab.phase == AbdPhase.IDLE or rep.lid != ab.lid:
+        # Fold + decide via the pure issuer transitions (§10–§11 quorums),
+        # shared with the batched engine in repro.core.proposer_vector.
+        if not proposer.abd_fold(ab, rep):
             return
-        if rep.kind == MsgKind.WRITE_QUERY_REPLY and ab.phase == AbdPhase.W_QUERY:
-            ab.repliers.add(rep.src)
-            if rep.base_ts > ab.max_base:
-                ab.max_base = rep.base_ts
-            if len(ab.repliers) >= self.cfg.majority:
-                self._write_phase2(ab)
-        elif rep.kind == MsgKind.WRITE_ACK and ab.phase == AbdPhase.W_WRITE:
-            ab.ackers.add(rep.src)
-            if len(ab.ackers) + 1 >= self.cfg.majority:   # +1 = local apply
-                self._complete_abd(ab, ReqKind.WRITE, ab.value,
-                                   Carstamp(ab.max_base, 0))
-        elif rep.kind == MsgKind.READ_QUERY_REPLY and ab.phase == AbdPhase.R_QUERY:
-            ab.repliers.add(rep.src)
-            if rep.opcode == Rep.CARSTAMP_TOO_LOW:
-                cs = Carstamp(rep.base_ts, rep.val_log)
-                if cs > ab.best_cs:
-                    ab.best_cs, ab.best_value = cs, rep.value
-                    ab.best_log_no, ab.best_rmw_id = rep.log_no, rep.rmw_id
-                    ab.storers = {rep.src}
-                elif cs == ab.best_cs:
-                    ab.storers.add(rep.src)
-            elif rep.opcode == Rep.CARSTAMP_EQUAL:
-                # replier stores exactly the carstamp the query carried
-                if ab.best_cs == ab.sent_cs:
-                    ab.storers.add(rep.src)
-            if len(ab.repliers) >= self.cfg.majority:
-                if len(ab.storers) >= self.cfg.majority:
-                    self._complete_abd(ab, ReqKind.READ, ab.best_value,
-                                       ab.best_cs)
-                else:
-                    self._read_write_back(ab)        # §11 commit round
-        elif rep.kind == MsgKind.COMMIT_ACK and ab.phase == AbdPhase.R_COMMIT:
-            ab.ackers.add(rep.src)
-            if len(ab.ackers) + 1 >= self.cfg.majority:
-                self._complete_abd(ab, ReqKind.READ, ab.best_value, ab.best_cs)
+        d = proposer.decide_abd(ab, majority=self.cfg.majority)
+        if d == Decision.WAIT:
+            return
+        if d == Decision.ABD_W2:
+            self._trace_decision(ab.sess, d, {
+                "key": ab.key, "value": ab.value,
+                "base_v": ab.max_base.version, "base_m": ab.max_base.mid})
+            self._write_phase2(ab)
+        elif d == Decision.ABD_W_DONE:
+            self._trace_decision(ab.sess, d)
+            self._complete_abd(ab, ReqKind.WRITE, ab.value,
+                               Carstamp(ab.max_base, 0))
+        elif d == Decision.ABD_R_DONE:
+            self._trace_decision(ab.sess, d)
+            self._complete_abd(ab, ReqKind.READ, ab.best_value, ab.best_cs)
+        elif d == Decision.ABD_R_WB:
+            self._trace_decision(ab.sess, d, {
+                "key": ab.key, "log_no": ab.best_log_no,
+                "rmw_cnt": ab.best_rmw_id.counter,
+                "rmw_sess": ab.best_rmw_id.gsess, "value": ab.best_value,
+                "base_v": ab.best_cs.base.version,
+                "base_m": ab.best_cs.base.mid,
+                "val_log": ab.best_cs.log_no})
+            self._read_write_back(ab)                # §11 commit round
+        elif d == Decision.ABD_RC_DONE:
+            self._trace_decision(ab.sess, d)
+            self._complete_abd(ab, ReqKind.READ, ab.best_value, ab.best_cs)
 
     def _write_phase2(self, ab: AbdEntry) -> None:
         ab.phase = AbdPhase.W_WRITE
@@ -933,6 +998,7 @@ class Machine:
         self.write_clock = max(self.write_clock + 1, ab.max_base.version + 1)
         ab.max_base = TS(self.write_clock, self.mid)
         self.write_log.append((ab.key, ab.max_base, ab.value))
+        self._trace_abd_round(ab)
         kv = get_kv(self.kvs, ab.key)
         msg = Msg(MsgKind.WRITE, self.mid, key=ab.key, value=ab.value,
                   base_ts=ab.max_base, lid=ab.lid)
@@ -947,6 +1013,7 @@ class Machine:
         ab.ackers = set()
         ab.lid = self._new_lid(ab.sess)
         self.bump("read_write_backs")
+        self._trace_abd_round(ab)
         kv = get_kv(self.kvs, ab.key)
         msg = Msg(MsgKind.READ_COMMIT, self.mid, key=ab.key,
                   log_no=ab.best_log_no, rmw_id=ab.best_rmw_id,
@@ -981,7 +1048,6 @@ class Machine:
             return
         ab.round_age = 0
         self.bump("abd_retransmits")
-        kv = get_kv(self.kvs, ab.key)
         if ab.phase == AbdPhase.W_QUERY:
             self._broadcast(Msg(MsgKind.WRITE_QUERY, self.mid, key=ab.key,
                                 lid=ab.lid))

@@ -2,41 +2,60 @@
 
 The discrete-event simulator (:mod:`repro.core.sim`) generates adversarial
 schedules — drops, duplicates, reordering, heavy tails, crashes — and every
-machine can tap the exact sequence of protocol messages it processed
-(``Machine.msg_trace``, enabled by ``Cluster.enable_msg_trace``).  This
-module replays such a trace through BOTH receiver implementations:
+machine can tap BOTH halves of what it processed:
 
-* the scalar handlers, one message at a time, via
-  :func:`repro.core.handlers.apply_msg`;
-* the SIMD engine, bucketed into conflict-free per-key batches and pushed
-  through :func:`repro.kernels.paxos_apply.ops.replica_step` (Pallas kernel
-  in interpret mode by default, or the pure-jnp oracle).
+* the **receiver** message stream (``Machine.msg_trace``, enabled by
+  ``Cluster.enable_msg_trace``), replayed here through the scalar handlers
+  (:func:`repro.core.handlers.apply_msg`) AND the SIMD engine
+  (:func:`repro.kernels.paxos_apply.ops.replica_step`, Pallas kernel in
+  interpret mode by default or the pure-jnp oracle), asserting reply- and
+  plane-for-plane state equality after every conflict-free batch;
+* the **issuer** event stream (``Machine.issuer_trace``, enabled by
+  ``Cluster.enable_issuer_trace``): round starts, steered replies,
+  decisions and pauses (see :mod:`repro.core.proposer`), replayed through
+  a scalar shadow built from the same pure transitions the live Machine
+  dispatches on AND the batched proposer engine
+  (:func:`repro.core.proposer_vector.proposer_step`), asserting decisions,
+  emission payloads and every :class:`ProposerTable` plane.
 
-After every batch the replies must agree field-for-field (per reply
-opcode), and at the end of the trace the KV table, the registered-rmw-id
-table and the reply stream must agree plane-for-plane.  Any schedule the
-simulator can produce is thereby a kernel correctness test.
+Any schedule the simulator can produce is thereby a correctness test of
+both engines.
 
-**Bucketing contract** (see ``core/vector.py``): per batch, at most one
-message per key (lane ``i`` == key ``i``); per-key message order preserved
-across batches; and a batch is flushed early when a PROPOSE/ACCEPT's
-rmw-id was registered by a commit lane earlier in the *same* batch —
-registrations scatter after the batch, so the scalar side (which registers
-immediately) would otherwise observe a fresher registry than the gather.
+**Receiver bucketing contract** (see ``core/vector.py``): per batch, at
+most one message per key (lane ``i`` == key ``i``); per-key message order
+preserved across batches; and a batch is flushed early when a
+PROPOSE/ACCEPT's rmw-id was registered by a commit lane earlier in the
+*same* batch — registrations scatter after the batch, so the scalar side
+(which registers immediately) would otherwise observe a fresher registry
+than the gather.
+
+**Issuer bucketing contract**: per batch, at most one reply per session
+(lane ``i`` == session ``i``); per-session order preserved; round/pause
+events flush any pending reply for their session before applying (they
+reload the lane — they are inputs, exactly like messages are inputs to
+the receiver replay).
 """
 
 from __future__ import annotations
 
+import dataclasses
+from collections import deque
 from typing import Dict, List, Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
 
-from . import handlers, vector
+from . import handlers, proposer, proposer_vector, vector
 from .handlers import Registry, get_kv
+from .proposer import (
+    ABD_PAUSED, AbdEntry, AbdPhase, AbdRound, Decision, DecisionEvent,
+    PauseEvent, Phase, ReplyEvent, RmwRound,
+)
 from .sim import Cluster, NetConfig, workload
 from .node import ProtocolConfig
-from .types import KVPair, Msg, MsgKind, Rep, RmwOp
+from .types import (
+    Carstamp, KVPair, Msg, MsgKind, Rep, Reply, RmwId, RmwOp, Tally,
+)
 
 from repro.kernels.paxos_apply import ops
 
@@ -63,6 +82,18 @@ def kv_to_lanes(kv: KVPair) -> Dict[str, int]:
         val_log=kv.val_log,
         last_rmw_cnt=kv.last_committed_rmw_id.counter,
         last_rmw_sess=kv.last_committed_rmw_id.gsess,
+    )
+
+
+def reply_to_lanes(rep: Reply) -> Dict[str, int]:
+    """One steered reply -> one lane of every IssuerReplyBatch plane."""
+    return dict(
+        kind=int(rep.kind), opcode=int(rep.opcode), src=rep.src, lid=rep.lid,
+        ts_v=rep.ts.version, ts_m=rep.ts.mid, log_no=rep.log_no,
+        rmw_cnt=rep.rmw_id.counter, rmw_sess=rep.rmw_id.gsess,
+        value=0 if rep.value is None else rep.value,
+        base_v=rep.base_ts.version, base_m=rep.base_ts.mid,
+        val_log=rep.val_log,
     )
 
 
@@ -252,6 +283,7 @@ def run_and_replay(seed: int, *, n_ops: int = 24, keys: int = 3,
                    cfg: Optional[ProtocolConfig] = None,
                    net: Optional[NetConfig] = None,
                    rmw_frac: float = 0.45, write_frac: float = 0.3,
+                   all_aboard: bool = False,
                    use_kernel: bool = True, interpret: bool = True,
                    block_rows: int = 1) -> Dict[str, int]:
     """End-to-end harness: seeded faulty sim run -> differential replay.
@@ -259,8 +291,15 @@ def run_and_replay(seed: int, *, n_ops: int = 24, keys: int = 3,
     Defaults exercise the full vocabulary (mixed RMW/write/read) under an
     adversarial network (drops, dups, heavy tails) and replay **every**
     machine's trace through the Pallas kernel in interpret mode.
+    ``all_aboard=True`` deploys the §9 fast path, putting the all-aboard
+    epoch-conflict lane into the replayed schedules.
     """
-    cfg = cfg or ProtocolConfig(n_machines=5, sessions_per_machine=2)
+    if cfg is None:
+        cfg = ProtocolConfig(n_machines=5, sessions_per_machine=2,
+                             all_aboard=all_aboard)
+    elif all_aboard and not cfg.all_aboard:
+        # don't silently drop the §9 deployment request on an explicit cfg
+        cfg = dataclasses.replace(cfg, all_aboard=True)
     net = net or NetConfig(seed=seed, drop_prob=0.06, dup_prob=0.05,
                            heavy_tail_prob=0.03, heavy_tail_extra=25.0)
     cluster = Cluster(cfg, net)
@@ -271,5 +310,506 @@ def run_and_replay(seed: int, *, n_ops: int = 24, keys: int = 3,
         raise RuntimeError(f"sim (seed {seed}) did not quiesce")
     stats = replay_cluster(cluster, n_keys=keys, use_kernel=use_kernel,
                            interpret=interpret, block_rows=block_rows)
+    stats["history"] = len(cluster.history)
+    return stats
+
+
+# ===========================================================================
+# Differential proposer replay: issuer traces vs the batched proposer engine
+# ===========================================================================
+#
+# The issuer is driven by replies *and* by local KV-coupled context, so its
+# trace carries both: round-start events (the broadcasts, which reload a
+# session's lane — they are inputs, exactly like messages are inputs to the
+# receiver replay), steered replies (the engine's work), the decisions the
+# live machine took (the oracle for the engine's decision planes), and
+# pauses (rounds abandoned from inspection timeouts).  The replay drives a
+# scalar shadow — the same Tally/abd_fold/decide_* code the Machine runs —
+# and the batched ProposerTable through identical event streams and asserts
+# after every reply batch that decisions, emissions and every table plane
+# agree.
+
+_TALLY_PLANES = (
+    "rep_bits", "ack_bits", "rmw_flag", "rmw_nb_flag", "lth_flag",
+    "sh_has", "sh_v", "sh_m",
+    "ltl_has", "ltl_log", "ltl_cnt", "ltl_sess", "ltl_val",
+    "ltl_base_v", "ltl_base_m", "ltl_vlog",
+    "la_has", "la_ts_v", "la_ts_m", "la_cnt", "la_sess", "la_val",
+    "la_base_v", "la_base_m", "la_vlog",
+    "fr_has", "fr_val", "fr_base_v", "fr_base_m", "fr_log",
+)
+
+_ABD_PLANES = (
+    "abd_phase", "abd_lid", "abd_key", "abd_value",
+    "abd_rep_bits", "abd_ack_bits", "abd_store_bits",
+    "abd_maxb_v", "abd_maxb_m",
+    "abd_sent_base_v", "abd_sent_base_m", "abd_sent_vlog",
+    "best_base_v", "best_base_m", "best_vlog",
+    "best_val", "best_log", "best_cnt", "best_sess",
+)
+
+# ActionBatch planes a decision's payload pins down (mirrors the payload
+# dicts recorded by Machine/_SessShadow)
+_ACTION_KEYS = {
+    Decision.RETRY: ("sh_has", "ts_v", "ts_m"),
+    Decision.LOG_TOO_LOW: ("log_no", "rmw_cnt", "rmw_sess", "value",
+                           "base_v", "base_m", "val_log"),
+    Decision.HELP: ("ts_v", "ts_m", "rmw_cnt", "rmw_sess", "value",
+                    "base_v", "base_m", "val_log"),
+    Decision.HELP_SELF: ("ts_v", "ts_m", "rmw_cnt", "rmw_sess", "value",
+                         "base_v", "base_m", "val_log"),
+    Decision.COMMIT_BCAST: ("log_no", "rmw_cnt", "rmw_sess", "value",
+                            "has_value", "base_v", "base_m", "val_log"),
+    Decision.ABD_W2: ("key", "value", "base_v", "base_m"),
+    Decision.ABD_R_WB: ("key", "log_no", "rmw_cnt", "rmw_sess", "value",
+                        "base_v", "base_m", "val_log"),
+}
+
+_BCAST_KIND = {
+    Decision.COMMIT_BCAST: int(MsgKind.COMMIT),
+    Decision.ABD_W2: int(MsgKind.WRITE),
+    Decision.ABD_R_WB: int(MsgKind.READ_COMMIT),
+}
+
+
+def _bits(srcs) -> int:
+    out = 0
+    for s in srcs:
+        out |= 1 << s
+    return out
+
+
+class _SessShadow:
+    """Scalar shadow of one issuer lane, driven by the SAME pure transition
+    functions the live Machine runs (Tally.note, abd_fold, decide_*)."""
+
+    def __init__(self):
+        self.phase = Phase.IDLE
+        self.lid = 0
+        self.aboard = 0
+        self.helping = 0
+        self.lth_counter = 0
+        self.key = 0
+        self.ts_v, self.ts_m = 0, -1
+        self.log_no = 0
+        self.rmw_cnt, self.rmw_sess = 0, -1
+        self.value = 0
+        self.has_value = 0
+        self.base_v, self.base_m = 0, -1
+        self.val_log = 0
+        self.tally = Tally()
+        self.abd = AbdEntry(sess=0)
+        self.abd_paused = False
+
+    # -- event application (inputs: identical for shadow and lanes) ---------
+
+    def load_rmw_round(self, ev: RmwRound) -> None:
+        self.phase = ev.phase
+        self.lid = ev.lid
+        self.aboard, self.helping = ev.aboard, ev.helping
+        self.lth_counter = ev.lth_counter
+        self.key = ev.key
+        self.ts_v, self.ts_m = ev.ts.version, ev.ts.mid
+        self.log_no = ev.log_no
+        self.rmw_cnt, self.rmw_sess = ev.rmw_id.counter, ev.rmw_id.gsess
+        self.value, self.has_value = ev.value, ev.has_value
+        self.base_v, self.base_m = ev.base_ts.version, ev.base_ts.mid
+        self.val_log = ev.val_log
+        self.tally = Tally()
+
+    def load_abd_round(self, ev: AbdRound) -> None:
+        ab = AbdEntry(sess=ev.sess)
+        ab.phase = ev.phase
+        ab.lid, ab.key, ab.value = ev.lid, ev.key, ev.value
+        ab.repliers = {s for s in range(8) if ev.rep_bits >> s & 1}
+        ab.storers = {s for s in range(8) if ev.store_bits >> s & 1}
+        if ev.phase in (AbdPhase.W_QUERY, AbdPhase.W_WRITE):
+            ab.max_base = ev.base_ts
+        else:
+            ab.best_cs = Carstamp(ev.base_ts, ev.val_log)
+            ab.best_value = ev.value
+            ab.best_log_no, ab.best_rmw_id = ev.log_no, ev.rmw_id
+            ab.sent_cs = Carstamp(ev.sent_base_ts, ev.sent_val_log)
+        self.abd = ab
+        self.abd_paused = False
+
+    def pause(self, abd: int) -> None:
+        if abd:
+            self.abd_paused = True
+        else:
+            self.phase = Phase.PAUSED
+
+    # -- reply application (the logic under differential test) --------------
+
+    def _abd_apply(self, rep: Reply, cfg: ProtocolConfig):
+        if self.abd_paused or not proposer.abd_fold(self.abd, rep):
+            return Decision.WAIT, None
+        ab = self.abd
+        d = proposer.decide_abd(ab, majority=cfg.majority)
+        if d == Decision.WAIT:
+            return d, None
+        self.abd_paused = True
+        if d == Decision.ABD_W2:
+            return d, {"key": ab.key, "value": ab.value,
+                       "base_v": ab.max_base.version,
+                       "base_m": ab.max_base.mid}
+        if d == Decision.ABD_R_WB:
+            return d, {"key": ab.key, "log_no": ab.best_log_no,
+                       "rmw_cnt": ab.best_rmw_id.counter,
+                       "rmw_sess": ab.best_rmw_id.gsess,
+                       "value": ab.best_value,
+                       "base_v": ab.best_cs.base.version,
+                       "base_m": ab.best_cs.base.mid,
+                       "val_log": ab.best_cs.log_no}
+        return d, None
+
+    def apply_reply(self, rep: Reply, cfg: ProtocolConfig):
+        """Steer + fold + decide; returns (Decision, payload dict | None).
+
+        Mirrors ``proposer_step`` gating exactly (a PAUSED lane tallies
+        nothing); the live machine may fold a straggler into a tally no
+        check will ever read again — invisible to decisions either way.
+        """
+        if rep.kind in (MsgKind.WRITE_QUERY_REPLY, MsgKind.WRITE_ACK,
+                        MsgKind.READ_QUERY_REPLY):
+            return self._abd_apply(rep, cfg)
+        if rep.kind == MsgKind.COMMIT_ACK:
+            if self.phase == Phase.COMMITTED and self.lid == rep.lid:
+                self.tally.note(rep)
+                d = proposer.decide_commit(
+                    self.tally, majority=cfg.majority,
+                    quorum_is_majority=cfg.commit_ack_quorum_is_majority)
+                if d != Decision.WAIT:
+                    self.phase = Phase.PAUSED
+                return d, None
+            return self._abd_apply(rep, cfg)
+        if (rep.kind == MsgKind.PROP_REPLY and self.phase == Phase.PROPOSED
+                and self.lid == rep.lid):
+            self.tally.note(rep)
+            d, pay = proposer.decide_propose(
+                self.tally, majority=cfg.majority,
+                own_rmw_id=RmwId(self.rmw_cnt, self.rmw_sess),
+                log_too_high_counter=self.lth_counter,
+                log_too_high_threshold=cfg.log_too_high_threshold)
+            if d == Decision.WAIT:
+                return d, None
+            self.phase = Phase.PAUSED
+            if d == Decision.RETRY:
+                return d, proposer.retry_payload(self.tally)
+            if d == Decision.LOG_TOO_LOW:
+                return d, proposer.log_too_low_payload(pay)
+            if d in (Decision.HELP, Decision.HELP_SELF):
+                return d, proposer.lower_acc_payload(pay)
+            return d, None
+        if (rep.kind == MsgKind.ACC_REPLY and self.phase == Phase.ACCEPTED
+                and self.lid == rep.lid):
+            self.tally.note(rep)
+            d, pay = proposer.decide_accept(
+                self.tally, n_machines=cfg.n_machines,
+                majority=cfg.majority, helping=self.helping == 1,
+                all_aboard=self.aboard == 1)
+            if d == Decision.WAIT:
+                return d, None
+            self.phase = Phase.PAUSED
+            if d == Decision.RETRY:
+                return d, proposer.retry_payload(self.tally)
+            if d == Decision.LOG_TOO_LOW:
+                return d, proposer.log_too_low_payload(pay)
+            if d == Decision.COMMIT_BCAST:
+                thin = self.tally.acks >= cfg.n_machines
+                return d, {"log_no": self.log_no, "rmw_cnt": self.rmw_cnt,
+                           "rmw_sess": self.rmw_sess,
+                           "value": 0 if thin else self.value,
+                           "has_value": 0 if thin else 1,
+                           "base_v": self.base_v, "base_m": self.base_m,
+                           "val_log": self.val_log}
+            return d, None
+        return Decision.WAIT, None
+
+    # -- plane conversion ----------------------------------------------------
+
+    def to_lanes(self) -> Dict[str, int]:
+        t = self.tally
+        sh, ltl, la = t.seen_higher, t.log_too_low, t.lower_acc
+        ab = self.abd
+        return dict(
+            phase=int(self.phase), lid=self.lid, aboard=self.aboard,
+            helping=self.helping, lth_counter=self.lth_counter,
+            key=self.key, ts_v=self.ts_v, ts_m=self.ts_m,
+            log_no=self.log_no, rmw_cnt=self.rmw_cnt,
+            rmw_sess=self.rmw_sess, value=self.value,
+            has_value=self.has_value, base_v=self.base_v,
+            base_m=self.base_m, val_log=self.val_log,
+            rep_bits=_bits(t.repliers), ack_bits=_bits(t.ackers),
+            rmw_flag=int(t.rmw_committed),
+            rmw_nb_flag=int(t.rmw_committed_no_bcast),
+            lth_flag=int(t.log_too_high),
+            sh_has=int(sh is not None),
+            sh_v=sh.version if sh is not None else 0,
+            sh_m=sh.mid if sh is not None else -1,
+            ltl_has=int(ltl is not None),
+            ltl_log=ltl.log_no if ltl is not None else 0,
+            ltl_cnt=ltl.rmw_id.counter if ltl is not None else 0,
+            ltl_sess=ltl.rmw_id.gsess if ltl is not None else -1,
+            ltl_val=ltl.value if ltl is not None else 0,
+            ltl_base_v=ltl.base_ts.version if ltl is not None else 0,
+            ltl_base_m=ltl.base_ts.mid if ltl is not None else -1,
+            ltl_vlog=ltl.val_log if ltl is not None else 0,
+            la_has=int(la is not None),
+            la_ts_v=la.ts.version if la is not None else 0,
+            la_ts_m=la.ts.mid if la is not None else -1,
+            la_cnt=la.rmw_id.counter if la is not None else 0,
+            la_sess=la.rmw_id.gsess if la is not None else -1,
+            la_val=la.value if la is not None else 0,
+            la_base_v=la.base_ts.version if la is not None else 0,
+            la_base_m=la.base_ts.mid if la is not None else -1,
+            la_vlog=la.val_log if la is not None else 0,
+            fr_has=int(t.fresh_value is not None),
+            fr_val=t.fresh_value if t.fresh_value is not None else 0,
+            fr_base_v=t.fresh_cs.base.version,
+            fr_base_m=t.fresh_cs.base.mid,
+            fr_log=t.fresh_cs.log_no,
+            abd_phase=ABD_PAUSED if self.abd_paused else int(ab.phase),
+            abd_lid=ab.lid, abd_key=ab.key, abd_value=ab.value,
+            abd_rep_bits=_bits(ab.repliers), abd_ack_bits=_bits(ab.ackers),
+            abd_store_bits=_bits(ab.storers),
+            abd_maxb_v=ab.max_base.version, abd_maxb_m=ab.max_base.mid,
+            abd_sent_base_v=ab.sent_cs.base.version,
+            abd_sent_base_m=ab.sent_cs.base.mid,
+            abd_sent_vlog=ab.sent_cs.log_no,
+            best_base_v=ab.best_cs.base.version,
+            best_base_m=ab.best_cs.base.mid,
+            best_vlog=ab.best_cs.log_no, best_val=ab.best_value,
+            best_log=ab.best_log_no, best_cnt=ab.best_rmw_id.counter,
+            best_sess=ab.best_rmw_id.gsess)
+
+
+def _load_rmw_round_lanes(lanes: Dict[str, np.ndarray], ev: RmwRound) -> None:
+    i = ev.sess
+    lanes["phase"][i] = int(ev.phase)
+    lanes["lid"][i] = ev.lid
+    lanes["aboard"][i], lanes["helping"][i] = ev.aboard, ev.helping
+    lanes["lth_counter"][i] = ev.lth_counter
+    lanes["key"][i] = ev.key
+    lanes["ts_v"][i], lanes["ts_m"][i] = ev.ts.version, ev.ts.mid
+    lanes["log_no"][i] = ev.log_no
+    lanes["rmw_cnt"][i] = ev.rmw_id.counter
+    lanes["rmw_sess"][i] = ev.rmw_id.gsess
+    lanes["value"][i], lanes["has_value"][i] = ev.value, ev.has_value
+    lanes["base_v"][i], lanes["base_m"][i] = (ev.base_ts.version,
+                                              ev.base_ts.mid)
+    lanes["val_log"][i] = ev.val_log
+    for f in _TALLY_PLANES:
+        lanes[f][i] = proposer_vector.TABLE_DEFAULTS[f]
+
+
+def _load_abd_round_lanes(lanes: Dict[str, np.ndarray], ev: AbdRound) -> None:
+    i = ev.sess
+    for f in _ABD_PLANES:
+        lanes[f][i] = proposer_vector.TABLE_DEFAULTS[f]
+    lanes["abd_phase"][i] = int(ev.phase)
+    lanes["abd_lid"][i], lanes["abd_key"][i] = ev.lid, ev.key
+    lanes["abd_value"][i] = ev.value
+    lanes["abd_rep_bits"][i] = ev.rep_bits
+    lanes["abd_store_bits"][i] = ev.store_bits
+    if ev.phase in (AbdPhase.W_QUERY, AbdPhase.W_WRITE):
+        lanes["abd_maxb_v"][i] = ev.base_ts.version
+        lanes["abd_maxb_m"][i] = ev.base_ts.mid
+    else:
+        lanes["best_base_v"][i] = ev.base_ts.version
+        lanes["best_base_m"][i] = ev.base_ts.mid
+        lanes["best_vlog"][i] = ev.val_log
+        lanes["best_val"][i] = ev.value
+        lanes["best_log"][i] = ev.log_no
+        lanes["best_cnt"][i] = ev.rmw_id.counter
+        lanes["best_sess"][i] = ev.rmw_id.gsess
+        lanes["abd_sent_base_v"][i] = ev.sent_base_ts.version
+        lanes["abd_sent_base_m"][i] = ev.sent_base_ts.mid
+        lanes["abd_sent_vlog"][i] = ev.sent_val_log
+
+
+def replay_issuer_trace(events: Sequence[object], *, cfg: ProtocolConfig
+                        ) -> Dict[str, int]:
+    """Replay one machine's issuer trace through the scalar shadow AND the
+    batched proposer engine, asserting plane-for-plane equality after every
+    reply batch, and decisions/emissions against the live machine's record.
+
+    Raises :class:`ReplayMismatch` on the first divergence.
+    """
+    n_sess = cfg.sessions_per_machine
+    commit_need = (cfg.majority - 1 if cfg.commit_ack_quorum_is_majority
+                   else 1)
+    lanes = {f: np.full((n_sess,), v, np.int32)
+             for f, v in proposer_vector.TABLE_DEFAULTS.items()}
+    shadows = [_SessShadow() for _ in range(n_sess)]
+    pending: Dict[int, Reply] = {}
+    expected: List[deque] = [deque() for _ in range(n_sess)]
+    stats = {"events": len(events), "replies": 0, "batches": 0,
+             "decisions": 0}
+
+    def compare_planes(where: str) -> None:
+        for sess, sh in enumerate(shadows):
+            want = sh.to_lanes()
+            got = {f: int(lanes[f][sess]) for f in want}
+            if got != want:
+                diff = {f: (want[f], got[f]) for f in want
+                        if want[f] != got[f]}
+                raise ReplayMismatch(
+                    f"proposer planes diverged ({where}) at session {sess} "
+                    f"(plane: (scalar, vector)): {diff}")
+
+    def flush() -> None:
+        if not pending:
+            return
+        stats["batches"] += 1
+        repb = {f: np.zeros((n_sess,), np.int32)
+                for f in proposer_vector.IssuerReplyBatch._fields}
+        repb["kind"] -= 1
+        for sess, rep in pending.items():
+            for f, v in reply_to_lanes(rep).items():
+                repb[f][sess] = v
+        table = proposer_vector.ProposerTable(
+            *[jnp.asarray(lanes[f])
+              for f in proposer_vector.ProposerTable._fields])
+        batch = proposer_vector.IssuerReplyBatch(
+            *[jnp.asarray(repb[f])
+              for f in proposer_vector.IssuerReplyBatch._fields])
+        table, actions = proposer_vector.proposer_step(
+            table, batch, n_machines=cfg.n_machines, majority=cfg.majority,
+            commit_need=commit_need,
+            log_too_high_threshold=cfg.log_too_high_threshold)
+        for f, plane in zip(proposer_vector.ProposerTable._fields, table):
+            lanes[f] = np.asarray(plane).copy()
+        act = {f: np.asarray(p) for f, p in
+               zip(proposer_vector.ActionBatch._fields, actions)}
+        # scalar shadow + three-way decision/emission check
+        for sess in range(n_sess):
+            got_d = Decision(int(act["decision"][sess]))
+            if sess not in pending:
+                if got_d != Decision.WAIT:
+                    raise ReplayMismatch(
+                        f"engine decided {got_d.name} on idle lane {sess}")
+                continue
+            sh_d, sh_pay = shadows[sess].apply_reply(pending[sess], cfg)
+            if got_d != sh_d:
+                raise ReplayMismatch(
+                    f"decision diverged at session {sess}: scalar "
+                    f"{sh_d.name}, vector {got_d.name} "
+                    f"(reply {pending[sess]})")
+            if sh_d == Decision.WAIT:
+                continue
+            stats["decisions"] += 1
+            stats[f"d_{sh_d.name.lower()}"] = \
+                stats.get(f"d_{sh_d.name.lower()}", 0) + 1
+            if not expected[sess]:
+                raise ReplayMismatch(
+                    f"session {sess} decided {sh_d.name} but the live "
+                    f"machine recorded no decision here")
+            ev = expected[sess].popleft()
+            if ev.decision != sh_d:
+                raise ReplayMismatch(
+                    f"live machine decided {ev.decision.name} at session "
+                    f"{sess}, replay decided {sh_d.name}")
+            keys = _ACTION_KEYS.get(sh_d)
+            if keys is not None:
+                got_pay = {k: int(act[k][sess]) for k in keys}
+                if ev.payload != got_pay or sh_pay != got_pay:
+                    raise ReplayMismatch(
+                        f"decision payload diverged at session {sess} "
+                        f"({sh_d.name}): machine {ev.payload}, shadow "
+                        f"{sh_pay}, vector {got_pay}")
+            want_kind = _BCAST_KIND.get(sh_d, -1)
+            if int(act["bcast_kind"][sess]) != want_kind:
+                raise ReplayMismatch(
+                    f"emission kind diverged at session {sess} "
+                    f"({sh_d.name}): want {want_kind}, got "
+                    f"{int(act['bcast_kind'][sess])}")
+        pending.clear()
+        compare_planes("after batch")
+
+    for ev in events:
+        if isinstance(ev, ReplyEvent):
+            if ev.sess in pending:
+                flush()
+            stats["replies"] += 1
+            pending[ev.sess] = ev.reply
+        elif isinstance(ev, DecisionEvent):
+            expected[ev.sess].append(ev)
+        elif isinstance(ev, RmwRound):
+            if ev.sess in pending:
+                flush()
+            shadows[ev.sess].load_rmw_round(ev)
+            _load_rmw_round_lanes(lanes, ev)
+        elif isinstance(ev, AbdRound):
+            if ev.sess in pending:
+                flush()
+            shadows[ev.sess].load_abd_round(ev)
+            _load_abd_round_lanes(lanes, ev)
+        elif isinstance(ev, PauseEvent):
+            if ev.sess in pending:
+                flush()
+            shadows[ev.sess].pause(ev.abd)
+            if ev.abd:
+                lanes["abd_phase"][ev.sess] = ABD_PAUSED
+            else:
+                lanes["phase"][ev.sess] = int(Phase.PAUSED)
+        else:
+            raise TypeError(f"unknown issuer trace event {ev!r}")
+    flush()
+    compare_planes("end of trace")
+    leftovers = sum(len(q) for q in expected)
+    if leftovers:
+        raise ReplayMismatch(
+            f"{leftovers} live-machine decisions were never reproduced "
+            f"by the replay")
+    return stats
+
+
+def replay_issuer_cluster(cluster: Cluster,
+                          machines: Optional[Sequence[int]] = None
+                          ) -> Dict[str, int]:
+    """Replay every (or selected) machine's issuer trace; aggregate stats."""
+    total: Dict[str, int] = {"machines": 0}
+    mids = machines if machines is not None else range(len(cluster.machines))
+    for mid in mids:
+        events = cluster.machines[mid].issuer_trace
+        if events is None:
+            raise ValueError(
+                f"machine {mid} has no issuer_trace — call "
+                f"cluster.enable_issuer_trace() before running the workload")
+        stats = replay_issuer_trace(events, cfg=cluster.cfg)
+        total["machines"] += 1
+        for k, v in stats.items():
+            total[k] = total.get(k, 0) + v
+    return total
+
+
+def run_and_replay_issuer(seed: int, *, n_ops: int = 24, keys: int = 3,
+                          cfg: Optional[ProtocolConfig] = None,
+                          net: Optional[NetConfig] = None,
+                          rmw_frac: float = 0.45, write_frac: float = 0.3,
+                          all_aboard: bool = False) -> Dict[str, int]:
+    """End-to-end proposer harness: seeded faulty sim -> issuer replay.
+
+    The mirror image of :func:`run_and_replay`: same adversarial network
+    and mixed workload, but the differential surface is the *issuer* side —
+    every machine's recorded reply stream is replayed through the scalar
+    shadow and :func:`repro.core.proposer_vector.proposer_step`.
+    """
+    if cfg is None:
+        cfg = ProtocolConfig(n_machines=5, sessions_per_machine=2,
+                             all_aboard=all_aboard)
+    elif all_aboard and not cfg.all_aboard:
+        # don't silently drop the §9 deployment request on an explicit cfg
+        cfg = dataclasses.replace(cfg, all_aboard=True)
+    net = net or NetConfig(seed=seed, drop_prob=0.06, dup_prob=0.05,
+                           heavy_tail_prob=0.03, heavy_tail_extra=25.0)
+    cluster = Cluster(cfg, net)
+    cluster.enable_issuer_trace()
+    workload(cluster, n_ops=n_ops, keys=keys, seed=seed,
+             rmw_frac=rmw_frac, write_frac=write_frac, op=RmwOp.FAA)
+    if not cluster.run_until_quiet(max_ticks=120_000):
+        raise RuntimeError(f"sim (seed {seed}) did not quiesce")
+    stats = replay_issuer_cluster(cluster)
     stats["history"] = len(cluster.history)
     return stats

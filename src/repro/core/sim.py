@@ -22,9 +22,10 @@ import dataclasses
 import heapq
 import itertools
 import random
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from .node import Completion, Machine, ProtocolConfig, ReqKind, Request
+from .proposer import PauseEvent
 from .types import RmwOp
 
 
@@ -141,6 +142,15 @@ class Cluster:
             if m.msg_trace is None:
                 m.msg_trace = []
 
+    def enable_issuer_trace(self) -> None:
+        """Record every issuer-side event (round starts, steered replies,
+        decisions, pauses — see :mod:`repro.core.proposer`), per machine
+        and in processing order, for the differential *proposer* replay
+        (:mod:`repro.core.replay`).  Traces survive :meth:`restart`."""
+        for m in self.machines:
+            if m.issuer_trace is None:
+                m.issuer_trace = []
+
     # -- client API ----------------------------------------------------------
 
     def submit(self, mid: int, sess: int, req: Request) -> int:
@@ -191,6 +201,14 @@ class Cluster:
         fresh.commit_log = old.commit_log
         fresh.write_log = old.write_log
         fresh.msg_trace = old.msg_trace
+        fresh.issuer_trace = old.issuer_trace
+        if fresh.issuer_trace is not None:
+            # volatile issuer state (sessions, tallies) died with the old
+            # incarnation: park every lane so the proposer replay drops
+            # stale-round replies exactly like the restarted machine does.
+            for s in range(self.cfg.sessions_per_machine):
+                fresh.issuer_trace.append(PauseEvent(s, 0))
+                fresh.issuer_trace.append(PauseEvent(s, 1))
         self.machines[mid] = fresh
 
     # -- driving -------------------------------------------------------------

@@ -201,6 +201,19 @@ def cs_gt(abase_v, abase_m, alog, bbase_v, bbase_m, blog):
     return ts_gt(abase_v, abase_m, bbase_v, bbase_m) | (base_eq & (alog > blog))
 
 
+def popcount8(x):
+    """Branch-free population count for small int bitmasks (< 8 bits).
+
+    Quorum arithmetic over per-machine reply bitmaps: the issuer engine
+    (:mod:`repro.core.proposer_vector`) tracks repliers/ackers/storers as
+    bitmasks (n_machines <= 7, §3) and compares counts against majorities.
+    """
+    total = x & 1
+    for i in range(1, 8):
+        total = total + ((x >> i) & 1)
+    return total
+
+
 def _where(c, a, b):
     return jnp.where(c, a, b)
 

@@ -25,7 +25,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.vector import KVTable, MsgBatch, NOOP, apply_batch
+from repro.core.vector import KVTable, MsgBatch, apply_batch
 from .kernel import LANE, paxos_apply
 
 

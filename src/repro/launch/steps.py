@@ -8,7 +8,7 @@ cell — used identically by the real trainer/server and the dry-run.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -16,7 +16,6 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.shapes import Shape
 from repro.models.config import ModelConfig
-from repro.models.lm import LM
 from repro.models.registry import build_model, input_specs
 from repro.optim import adamw
 from repro.parallel.sharding import is_logical_spec, resolve

@@ -12,7 +12,7 @@ attention/MLP weights are 2-D sharded (tensor dim on "model", fsdp dim on
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

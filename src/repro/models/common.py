@@ -9,9 +9,7 @@ maps them to mesh PartitionSpecs for pjit in/out shardings.
 
 from __future__ import annotations
 
-import dataclasses
-import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

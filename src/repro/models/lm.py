@@ -18,14 +18,12 @@ Three lowered entry points per model (the dry-run's units of compilation):
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.parallel.sharding import shard
-from . import blocks
 from .blocks import (
     apply_attention, apply_attention_decode, apply_mamba2,
     apply_mamba2_decode, apply_mlp, apply_moe, apply_rwkv6,

@@ -9,7 +9,6 @@ self-attention + cross-attention to the encoder output.
 
 from __future__ import annotations
 
-from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -19,7 +18,7 @@ from .blocks import (
     apply_attention, apply_attention_decode, apply_mlp, attn_cache_spec,
     init_attention, init_mlp, init_norm, norm_apply, _qkv,
 )
-from .common import Init, default_positions, stack_layers, tree_build
+from .common import Init, stack_layers, tree_build
 from .config import ModelConfig
 
 

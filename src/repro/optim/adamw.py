@@ -9,7 +9,7 @@ params get FSDP-sharded states — ZeRO-1).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -20,7 +20,6 @@ import time
 from typing import Any, Callable, Dict, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint import store
 from repro.coord.registry import PaxosRegistry

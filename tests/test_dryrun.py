@@ -9,7 +9,7 @@ import sys
 import pytest
 
 from repro.configs.archs import ARCHS
-from repro.configs.shapes import SHAPES, cells, skip_reason
+from repro.configs.shapes import cells, skip_reason
 from repro.launch.dryrun import _shape_bytes, collective_bytes
 from repro.launch import roofline
 

@@ -9,7 +9,6 @@ against semantic drift.
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.compat import use_mesh

@@ -1,0 +1,410 @@
+"""Batched proposer engine vs the scalar issuer transitions, lane by lane.
+
+Unit tests drive handcrafted reply sequences through
+``proposer_vector.proposer_step`` and assert the decisions/emissions the
+paper specifies (§4.3/§4.6 arbitration, §6 helping, §8.6 thin commits,
+§8.7 log-too-high, §9 all-aboard quorums, §10–§11 ABD).  The property
+tests (hypothesis) fold *randomized reply interleavings* — including the
+help/steal and log-too-low paths — through the engine and through the
+scalar shadow (the same ``Tally``/``decide_*`` code the live ``Machine``
+runs) and assert plane-for-plane agreement after every reply.
+
+Whole-schedule scalar-Machine-vs-engine equivalence is
+tests/test_replay.py (differential issuer replay).
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import proposer, proposer_vector as pv, replay
+from repro.core.node import ProtocolConfig
+from repro.core.proposer import (
+    AbdPhase, AbdRound, Decision, Phase, RmwRound,
+)
+from repro.core.types import MsgKind, Rep, Reply, RmwId, TS, TS_ZERO
+
+CFG = ProtocolConfig(n_machines=5, sessions_per_machine=4)
+
+
+# ---------------------------------------------------------------------------
+# a tiny driver: one lane table + scalar shadow, one reply per batch
+# ---------------------------------------------------------------------------
+
+class Harness:
+    def __init__(self, cfg=CFG):
+        self.cfg = cfg
+        self.n = cfg.sessions_per_machine
+        self.lanes = {f: np.full((self.n,), v, np.int32)
+                      for f, v in pv.TABLE_DEFAULTS.items()}
+        self.shadows = [replay._SessShadow() for _ in range(self.n)]
+
+    def load(self, ev):
+        if isinstance(ev, RmwRound):
+            self.shadows[ev.sess].load_rmw_round(ev)
+            replay._load_rmw_round_lanes(self.lanes, ev)
+        else:
+            self.shadows[ev.sess].load_abd_round(ev)
+            replay._load_abd_round_lanes(self.lanes, ev)
+
+    def step(self, sess, rep):
+        """Feed one reply; returns (decision, action row) after asserting
+        engine == shadow on the decision and on every plane."""
+        repb = {f: np.zeros((self.n,), np.int32)
+                for f in pv.IssuerReplyBatch._fields}
+        repb["kind"] -= 1
+        for f, v in replay.reply_to_lanes(rep).items():
+            repb[f][sess] = v
+        table = pv.ProposerTable(*[jnp.asarray(self.lanes[f])
+                                   for f in pv.ProposerTable._fields])
+        batch = pv.IssuerReplyBatch(*[jnp.asarray(repb[f])
+                                      for f in pv.IssuerReplyBatch._fields])
+        kw = dict(n_machines=self.cfg.n_machines, majority=self.cfg.majority,
+                  commit_need=(self.cfg.majority - 1
+                               if self.cfg.commit_ack_quorum_is_majority
+                               else 1),
+                  log_too_high_threshold=self.cfg.log_too_high_threshold)
+        table, actions = pv.proposer_step(table, batch, **kw)
+        for f, plane in zip(pv.ProposerTable._fields, table):
+            self.lanes[f] = np.asarray(plane).copy()
+        act = {f: int(np.asarray(p)[sess]) for f, p in
+               zip(pv.ActionBatch._fields, actions)}
+        sh_d, sh_pay = self.shadows[sess].apply_reply(rep, self.cfg)
+        got_d = Decision(act["decision"])
+        assert got_d == sh_d, (got_d, sh_d, rep)
+        keys = replay._ACTION_KEYS.get(sh_d)
+        if keys is not None:
+            assert {k: act[k] for k in keys} == sh_pay
+        want = self.shadows[sess].to_lanes()
+        got = {f: int(self.lanes[f][sess]) for f in want}
+        assert got == want, {f: (want[f], got[f]) for f in want
+                             if want[f] != got[f]}
+        return got_d, act
+
+
+def prop_round(sess=0, lid=77, key=1, ts=TS(4, 2), log_no=2,
+               rmw=RmwId(3, 9), lth=0):
+    return RmwRound(sess=sess, phase=Phase.PROPOSED, lid=lid, key=key, ts=ts,
+                    log_no=log_no, rmw_id=rmw, value=0, has_value=1,
+                    base_ts=TS(1, 0), val_log=0, aboard=0, helping=0,
+                    lth_counter=lth)
+
+
+def acc_round(sess=0, lid=88, key=1, ts=TS(4, 2), log_no=2, rmw=RmwId(3, 9),
+              value=41, base_ts=TS(1, 0), aboard=0, helping=0):
+    return RmwRound(sess=sess, phase=Phase.ACCEPTED, lid=lid, key=key, ts=ts,
+                    log_no=log_no, rmw_id=rmw, value=value, has_value=1,
+                    base_ts=base_ts, val_log=log_no, aboard=aboard,
+                    helping=helping, lth_counter=0)
+
+
+def reply(kind, opcode, src, lid, **kw):
+    return Reply(kind, src, opcode, lid, **kw)
+
+
+# ---------------------------------------------------------------------------
+# propose-round arbitration (§4.3)
+# ---------------------------------------------------------------------------
+
+def test_majority_acks_local_accept():
+    h = Harness()
+    h.load(prop_round())
+    for src in (0, 1):
+        d, _ = h.step(0, reply(MsgKind.PROP_REPLY, Rep.ACK, src, 77))
+        assert d == Decision.WAIT
+    d, _ = h.step(0, reply(MsgKind.PROP_REPLY, Rep.ACK, 2, 77))
+    assert d == Decision.LOCAL_ACCEPT
+
+
+def test_duplicate_replies_cannot_fake_quorum():
+    h = Harness()
+    h.load(prop_round())
+    for _ in range(4):   # same source four times
+        d, _ = h.step(0, reply(MsgKind.PROP_REPLY, Rep.ACK, 1, 77))
+        assert d == Decision.WAIT
+
+
+def test_stale_lid_dropped():
+    h = Harness()
+    h.load(prop_round(lid=77))
+    for src in (0, 1, 2, 3):
+        d, _ = h.step(0, reply(MsgKind.PROP_REPLY, Rep.ACK, src, 76))
+        assert d == Decision.WAIT
+
+
+def test_seen_higher_retries_immediately_with_blocking_ts():
+    # a Seen-higher nack triggers the §8.4 retry on the FIRST such reply
+    h = Harness()
+    h.load(prop_round())
+    d, act = h.step(0, reply(MsgKind.PROP_REPLY, Rep.SEEN_HIGHER_ACC, 2, 77,
+                             ts=TS(9, 3)))
+    assert d == Decision.RETRY
+    assert (act["sh_has"], act["ts_v"], act["ts_m"]) == (1, 9, 3)
+    # ... and the paused lane drops the later (higher) straggler
+    d, _ = h.step(0, reply(MsgKind.PROP_REPLY, Rep.SEEN_HIGHER_PROP, 1, 77,
+                           ts=TS(11, 1)))
+    assert d == Decision.WAIT
+
+
+def test_log_too_low_decides_immediately_with_payload():
+    # Log-too-low dominates (§8.2): decided on the first such reply,
+    # shipping that reply's last-committed payload for the local commit
+    h = Harness()
+    h.load(prop_round())
+    d, act = h.step(0, reply(MsgKind.PROP_REPLY, Rep.LOG_TOO_LOW, 2, 77,
+                             log_no=5, rmw_id=RmwId(7, 6), value=20,
+                             base_ts=TS(2, 0), val_log=5))
+    assert d == Decision.LOG_TOO_LOW
+    assert act["log_no"] == 5 and act["value"] == 20
+    assert (act["rmw_cnt"], act["rmw_sess"]) == (7, 6)
+    assert act["bcast_kind"] == -1               # local commit, no broadcast
+
+
+def test_help_vs_help_self():
+    # a foreign accepted RMW -> HELP with its payload
+    h = Harness()
+    h.load(prop_round(rmw=RmwId(3, 9)))
+    h.step(0, reply(MsgKind.PROP_REPLY, Rep.ACK, 1, 77))
+    h.step(0, reply(MsgKind.PROP_REPLY, Rep.SEEN_LOWER_ACC, 2, 77,
+                    ts=TS(2, 1), rmw_id=RmwId(8, 30), value=5,
+                    base_ts=TS(1, 1), val_log=2))
+    d, act = h.step(0, reply(MsgKind.PROP_REPLY, Rep.SEEN_LOWER_ACC, 3, 77,
+                             ts=TS(3, 0), rmw_id=RmwId(9, 31), value=6,
+                             base_ts=TS(1, 2), val_log=2))
+    assert d == Decision.HELP
+    assert (act["rmw_cnt"], act["rmw_sess"]) == (9, 31)   # max accepted-TS
+    # our own rmw-id accepted elsewhere -> HELP_SELF (§8.4)
+    h2 = Harness()
+    h2.load(prop_round(rmw=RmwId(3, 9)))
+    h2.step(0, reply(MsgKind.PROP_REPLY, Rep.ACK, 1, 77))
+    h2.step(0, reply(MsgKind.PROP_REPLY, Rep.SEEN_LOWER_ACC, 2, 77,
+                     ts=TS(2, 1), rmw_id=RmwId(3, 9), value=5,
+                     base_ts=TS(1, 1), val_log=2))
+    d, _ = h2.step(0, reply(MsgKind.PROP_REPLY, Rep.ACK, 3, 77))
+    assert d == Decision.HELP_SELF
+
+
+def test_log_too_high_threshold_recommit():
+    h = Harness()
+    h.load(prop_round(lth=CFG.log_too_high_threshold - 1))
+    h.step(0, reply(MsgKind.PROP_REPLY, Rep.LOG_TOO_HIGH, 1, 77))
+    h.step(0, reply(MsgKind.PROP_REPLY, Rep.LOG_TOO_HIGH, 2, 77))
+    d, _ = h.step(0, reply(MsgKind.PROP_REPLY, Rep.LOG_TOO_HIGH, 3, 77))
+    assert d == Decision.RECOMMIT
+    h2 = Harness()
+    h2.load(prop_round(lth=0))
+    h2.step(0, reply(MsgKind.PROP_REPLY, Rep.LOG_TOO_HIGH, 1, 77))
+    h2.step(0, reply(MsgKind.PROP_REPLY, Rep.LOG_TOO_HIGH, 2, 77))
+    d, _ = h2.step(0, reply(MsgKind.PROP_REPLY, Rep.LOG_TOO_HIGH, 3, 77))
+    assert d == Decision.RETRY_LOG_TOO_HIGH
+
+
+# ---------------------------------------------------------------------------
+# accept-round arbitration (§4.6, §8.6, §9)
+# ---------------------------------------------------------------------------
+
+def test_accept_majority_emits_commit():
+    h = Harness()
+    h.load(acc_round(value=41, base_ts=TS(1, 0), log_no=2))
+    h.step(0, reply(MsgKind.ACC_REPLY, Rep.ACK, 2, 88))   # local implicit ack
+    h.step(0, reply(MsgKind.ACC_REPLY, Rep.ACK, 0, 88))
+    d, act = h.step(0, reply(MsgKind.ACC_REPLY, Rep.ACK, 1, 88))
+    assert d == Decision.COMMIT_BCAST
+    assert act["bcast_kind"] == int(MsgKind.COMMIT)
+    assert (act["value"], act["has_value"], act["log_no"]) == (41, 1, 2)
+
+
+def test_all_aboard_all_acks_emit_thin_commit():
+    # §8.6 thin commits ride the §9 all-aboard success path: the full
+    # quorum rule is what lets ALL acks gather before the decision fires
+    h = Harness()
+    h.load(acc_round(aboard=1))
+    for src in range(CFG.n_machines - 1):
+        d, act = h.step(0, reply(MsgKind.ACC_REPLY, Rep.ACK, src, 88))
+        assert d == Decision.WAIT
+    d, act = h.step(0, reply(MsgKind.ACC_REPLY, Rep.ACK, 4, 88))
+    assert d == Decision.COMMIT_BCAST
+    assert (act["value"], act["has_value"]) == (0, 0)   # §8.6 thin
+
+
+def test_all_aboard_needs_full_quorum_and_falls_back_on_nack():
+    h = Harness()
+    h.load(acc_round(aboard=1))
+    for src in range(CFG.majority):
+        d, _ = h.step(0, reply(MsgKind.ACC_REPLY, Rep.ACK, src, 88))
+        assert d == Decision.WAIT                 # majority is NOT enough (§9)
+    for src in range(CFG.majority, CFG.n_machines - 1):
+        h.step(0, reply(MsgKind.ACC_REPLY, Rep.ACK, src, 88))
+    # any nack makes the all-aboard round fall back to CP immediately
+    h2 = Harness()
+    h2.load(acc_round(aboard=1))
+    d, _ = h2.step(0, reply(MsgKind.ACC_REPLY, Rep.SEEN_HIGHER_ACC, 1, 88,
+                            ts=TS(5, 1)))
+    assert d == Decision.RETRY
+
+
+def test_helping_round_stops_on_any_nack():
+    h = Harness()
+    h.load(acc_round(helping=1))
+    d, _ = h.step(0, reply(MsgKind.ACC_REPLY, Rep.LOG_TOO_HIGH, 3, 88))
+    assert d == Decision.STOP_HELP
+
+
+# ---------------------------------------------------------------------------
+# ABD rounds (§10–§11)
+# ---------------------------------------------------------------------------
+
+def abd_wq_round(sess=0, lid=55, key=2, value=9, base=TS(2, 1)):
+    return AbdRound(sess=sess, phase=AbdPhase.W_QUERY, lid=lid, key=key,
+                    value=value, base_ts=base, val_log=0,
+                    sent_base_ts=TS_ZERO, sent_val_log=0, log_no=0,
+                    rmw_id=RmwId(0, -1), rep_bits=1 << 4, store_bits=0)
+
+
+def test_abd_write_query_emits_phase2_with_max_base():
+    h = Harness()
+    h.load(abd_wq_round())
+    h.step(0, reply(MsgKind.WRITE_QUERY_REPLY, Rep.ACK, 0, 55,
+                    base_ts=TS(7, 3)))
+    d, act = h.step(0, reply(MsgKind.WRITE_QUERY_REPLY, Rep.ACK, 1, 55,
+                             base_ts=TS(5, 0)))
+    assert d == Decision.ABD_W2
+    assert act["bcast_kind"] == int(MsgKind.WRITE)
+    assert (act["base_v"], act["base_m"], act["value"]) == (7, 3, 9)
+
+
+def test_abd_read_write_back_when_storers_below_majority():
+    best = dict(base_ts=TS(3, 2), val_log=4, value=77, log_no=4,
+                rmw_id=RmwId(6, 12))
+    h = Harness()
+    h.load(AbdRound(sess=1, phase=AbdPhase.R_QUERY, lid=66, key=0,
+                    value=10, base_ts=TS(1, 1), val_log=2,
+                    sent_base_ts=TS(1, 1), sent_val_log=2, log_no=2,
+                    rmw_id=RmwId(2, 3), rep_bits=1 << 4, store_bits=1 << 4))
+    h.step(1, reply(MsgKind.READ_QUERY_REPLY, Rep.CARSTAMP_TOO_LOW, 0, 66,
+                    **best))
+    d, act = h.step(1, reply(MsgKind.READ_QUERY_REPLY, Rep.CARSTAMP_TOO_HIGH,
+                             1, 66))
+    assert d == Decision.ABD_R_WB                 # only one storer of best
+    assert act["bcast_kind"] == int(MsgKind.READ_COMMIT)
+    assert (act["value"], act["log_no"], act["val_log"]) == (77, 4, 4)
+    assert (act["rmw_cnt"], act["rmw_sess"]) == (6, 12)
+
+
+def test_abd_read_completes_when_majority_stores():
+    h = Harness()
+    h.load(AbdRound(sess=0, phase=AbdPhase.R_QUERY, lid=66, key=0,
+                    value=10, base_ts=TS(1, 1), val_log=2,
+                    sent_base_ts=TS(1, 1), sent_val_log=2, log_no=2,
+                    rmw_id=RmwId(2, 3), rep_bits=1 << 4, store_bits=1 << 4))
+    h.step(0, reply(MsgKind.READ_QUERY_REPLY, Rep.CARSTAMP_EQUAL, 0, 66))
+    d, _ = h.step(0, reply(MsgKind.READ_QUERY_REPLY, Rep.CARSTAMP_EQUAL,
+                           1, 66))
+    assert d == Decision.ABD_R_DONE
+
+
+# ---------------------------------------------------------------------------
+# randomized reply interleavings (hypothesis): engine == scalar shadow
+# (guarded so the handcrafted tests above still run without hypothesis;
+# CI installs requirements-dev.txt, so these always run there)
+# ---------------------------------------------------------------------------
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import HealthCheck, given, settings
+    HAS_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAS_HYPOTHESIS = False
+
+PROP_OPS = [Rep.ACK, Rep.ACK_BASE_TS_STALE, Rep.RMW_ID_COMMITTED,
+            Rep.RMW_ID_COMMITTED_NO_BCAST, Rep.LOG_TOO_LOW, Rep.LOG_TOO_HIGH,
+            Rep.SEEN_HIGHER_PROP, Rep.SEEN_HIGHER_ACC, Rep.SEEN_LOWER_ACC]
+RQ_OPS = [Rep.CARSTAMP_TOO_LOW, Rep.CARSTAMP_EQUAL, Rep.CARSTAMP_TOO_HIGH]
+
+if HAS_HYPOTHESIS:
+    QUICK = settings(max_examples=60, deadline=None,
+                     suppress_health_check=[HealthCheck.too_slow])
+
+    @st.composite
+    def rmw_replies(draw):
+        """A randomized propose- or accept-round reply interleaving, heavy
+        on the help/steal (Seen-lower-acc / Seen-higher) and log-too-low
+        paths."""
+        n = draw(st.sampled_from([3, 5, 7]))
+        accept = draw(st.booleans())
+        kind = MsgKind.ACC_REPLY if accept else MsgKind.PROP_REPLY
+        reps = []
+        for _ in range(draw(st.integers(1, 12))):
+            op = draw(st.sampled_from(PROP_OPS))
+            reps.append(Reply(
+                kind, draw(st.integers(0, n - 1)), op,
+                draw(st.sampled_from([77, 76])),      # mostly live, one stale
+                ts=TS(draw(st.integers(0, 6)), draw(st.integers(0, n - 1))),
+                log_no=draw(st.integers(0, 5)),
+                rmw_id=RmwId(draw(st.integers(1, 4)),
+                             draw(st.integers(0, 12))),
+                value=draw(st.integers(0, 99)),
+                base_ts=TS(draw(st.integers(0, 3)),
+                           draw(st.integers(0, n - 1))),
+                val_log=draw(st.integers(0, 5))))
+        round_ev = (acc_round(rmw=RmwId(2, 7), lid=77,
+                              aboard=int(draw(st.booleans())),
+                              helping=int(draw(st.booleans())))
+                    if accept else prop_round(rmw=RmwId(2, 7), lid=77,
+                                              lth=draw(st.integers(0, 4))))
+        cfg = ProtocolConfig(n_machines=n, sessions_per_machine=4,
+                             log_too_high_threshold=draw(st.integers(2, 5)))
+        return cfg, round_ev, reps
+
+    @QUICK
+    @given(case=rmw_replies())
+    def test_random_rmw_interleavings_match_scalar(case):
+        cfg, round_ev, reps = case
+        h = Harness(cfg)
+        h.load(round_ev)
+        for rep in reps:
+            h.step(0, rep)  # Harness.step asserts decisions+planes agree
+
+    @QUICK
+    @given(n=st.sampled_from([3, 5, 7]),
+           ops=st.lists(st.tuples(
+               st.sampled_from(RQ_OPS), st.integers(0, 6), st.integers(0, 3),
+               st.integers(0, 3), st.integers(0, 4), st.integers(0, 99)),
+               min_size=1, max_size=10),
+           srcs=st.lists(st.integers(0, 6), min_size=1, max_size=10))
+    def test_random_read_query_interleavings_match_scalar(n, ops, srcs):
+        cfg = ProtocolConfig(n_machines=n, sessions_per_machine=4)
+        h = Harness(cfg)
+        h.load(AbdRound(sess=2, phase=AbdPhase.R_QUERY, lid=66, key=0,
+                        value=10, base_ts=TS(1, 1), val_log=2,
+                        sent_base_ts=TS(1, 1), sent_val_log=2, log_no=2,
+                        rmw_id=RmwId(2, 3), rep_bits=1 << (n - 1),
+                        store_bits=1 << (n - 1)))
+        for (op, bv, bm, vlog, log, val), src in zip(ops, srcs):
+            h.step(2, Reply(MsgKind.READ_QUERY_REPLY, src % n, op, 66,
+                            base_ts=TS(bv, bm), val_log=vlog, log_no=log,
+                            value=val, rmw_id=RmwId(1, 5)))
+
+
+def test_fresh_table_matches_fresh_shadow():
+    h = Harness()
+    for sess in range(h.n):
+        want = h.shadows[sess].to_lanes()
+        got = {f: int(h.lanes[f][sess]) for f in want}
+        assert got == want
+    assert set(pv.ProposerTable._fields) == set(
+        h.shadows[0].to_lanes().keys())
+
+
+def test_decision_payload_builders_are_shared_with_machine():
+    """Machine and the replay shadow must use the SAME payload builders."""
+    from repro.core.node import Machine
+    assert Machine._retry_payload is proposer.retry_payload
+    assert Machine._ltl_payload is proposer.log_too_low_payload
+    assert Machine._help_payload is proposer.lower_acc_payload
+
+
+def test_dataclass_events_round_trip():
+    ev = prop_round()
+    assert dataclasses.asdict(ev)["lid"] == 77

@@ -1,10 +1,18 @@
-"""Differential trace replay: sim schedules vs the SIMD engine/kernel.
+"""Differential trace replay: sim schedules vs the SIMD engines/kernel.
 
 Every seeded run drives a mixed RMW/write/read workload over an adversarial
-network (drops, duplicates, heavy-tail delays), taps each machine's
-receiver-side message stream, and replays it through the Pallas kernel
-(interpret mode) AND the scalar handlers, asserting reply- and
-plane-for-plane state equality (see repro.core.replay).
+network (drops, duplicates, heavy-tail delays) and differentially replays
+per-machine traces:
+
+* receiver side — the message stream through the Pallas kernel (interpret
+  mode) AND the scalar handlers, asserting reply- and plane-for-plane state
+  equality (repro.core.replay.run_and_replay);
+* issuer side — the reply/round/decision stream through the batched
+  proposer engine (repro.core.proposer_vector) AND the scalar shadow built
+  from the same pure transitions the Machine runs, asserting decisions,
+  emissions and every ProposerTable plane (run_and_replay_issuer).
+
+Both mixes include all-aboard (§9) deployments.
 """
 
 import pytest
@@ -16,6 +24,9 @@ from repro.core.types import Msg, MsgKind, RmwId, TS
 
 # ≥ 20 seeded adversarial traces in CI (acceptance criterion for PR 3)
 SEEDS = range(22)
+# all-aboard deployments in the replayed schedule mix (§9 epoch-conflict
+# lane on the receiver, full-quorum/fallback arbitration on the issuer)
+ABOARD_SEEDS = (0, 3, 7, 11, 15)
 
 
 @pytest.mark.parametrize("seed", SEEDS)
@@ -24,6 +35,14 @@ def test_differential_replay_kernel(seed):
                                   use_kernel=True, interpret=True)
     assert stats["machines"] == 5
     assert stats["messages"] > 0
+    assert stats["history"] == 24
+
+
+@pytest.mark.parametrize("seed", ABOARD_SEEDS)
+def test_differential_replay_kernel_all_aboard(seed):
+    stats = replay.run_and_replay(seed, n_ops=24, keys=3, all_aboard=True,
+                                  use_kernel=True, interpret=True)
+    assert stats["machines"] == 5
     assert stats["history"] == 24
 
 
@@ -61,6 +80,75 @@ def test_replay_with_crash_and_restart():
     assert cl.run_until_quiet(max_ticks=120_000)
     stats = replay.replay_cluster(cl, n_keys=2)
     assert stats["machines"] == 5
+
+
+# ---------------------------------------------------------------------------
+# differential proposer replay (scalar Machine vs proposer_step)
+# ---------------------------------------------------------------------------
+
+# ≥ 20 seeded faulty traces, all-aboard deployments included (acceptance
+# criterion for this PR): odd seeds deploy the §9 fast path.
+ISSUER_SEEDS = range(22)
+
+
+@pytest.mark.parametrize("seed", ISSUER_SEEDS)
+def test_differential_issuer_replay(seed):
+    stats = replay.run_and_replay_issuer(seed, n_ops=24, keys=3,
+                                         all_aboard=bool(seed % 2))
+    assert stats["machines"] == 5
+    assert stats["replies"] > 0
+    assert stats["decisions"] > 0
+    assert stats["history"] == 24
+
+
+def test_issuer_replay_covers_decision_vocabulary():
+    """Across a handful of seeds the replayed decisions must cover the
+    protocol's arbitration outcomes: local accepts, commit rounds, retries,
+    helping, and every ABD phase transition."""
+    counts = {}
+    for seed, aboard in ((0, False), (2, False), (3, True), (7, True)):
+        stats = replay.run_and_replay_issuer(seed, n_ops=24, keys=3,
+                                             all_aboard=aboard)
+        for k, v in stats.items():
+            if k.startswith("d_"):
+                counts[k] = counts.get(k, 0) + v
+    for d in ("d_local_accept", "d_commit_bcast", "d_commit_done", "d_retry",
+              "d_help", "d_help_self", "d_stop_help", "d_log_too_low",
+              "d_abd_w2", "d_abd_w_done", "d_abd_r_done", "d_abd_r_wb",
+              "d_abd_rc_done"):
+        assert counts.get(d, 0) > 0, f"decision vocabulary gap: no {d}"
+
+
+def test_issuer_replay_with_crash_and_restart():
+    """Issuer traces spanning a crash/restart replay cleanly: the restart
+    parks every lane (volatile tallies died), so stale-round replies are
+    dropped on both sides."""
+    cfg = ProtocolConfig(n_machines=5, sessions_per_machine=2)
+    cl = Cluster(cfg, NetConfig(seed=9, drop_prob=0.04))
+    cl.enable_issuer_trace()
+    workload(cl, n_ops=20, keys=2, seed=9, rmw_frac=0.5, write_frac=0.25)
+    cl.step(8)
+    cl.crash(4)
+    cl.step(6)
+    cl.restart(4)
+    assert cl.run_until_quiet(max_ticks=120_000)
+    stats = replay.replay_issuer_cluster(cl)
+    assert stats["machines"] == 5
+    assert stats["decisions"] > 0
+
+
+def test_issuer_and_receiver_replay_share_a_schedule():
+    """Both taps can record the same run: the receiver replay and the
+    issuer replay validate the two halves of every machine end to end."""
+    cfg = ProtocolConfig(n_machines=5, sessions_per_machine=2)
+    cl = Cluster(cfg, NetConfig(seed=4, drop_prob=0.05, dup_prob=0.04))
+    cl.enable_msg_trace()
+    cl.enable_issuer_trace()
+    workload(cl, n_ops=24, keys=3, seed=4, rmw_frac=0.45, write_frac=0.3)
+    assert cl.run_until_quiet(max_ticks=120_000)
+    recv = replay.replay_cluster(cl, n_keys=3)
+    issu = replay.replay_issuer_cluster(cl)
+    assert recv["machines"] == issu["machines"] == 5
 
 
 # ---------------------------------------------------------------------------

@@ -3,7 +3,7 @@
 import pytest
 
 from repro.core import checkers
-from repro.core.node import ProtocolConfig, ReqKind, Request
+from repro.core.node import ProtocolConfig, ReqKind
 from repro.core.sim import Cluster, NetConfig, workload
 from repro.core.types import RmwOp
 

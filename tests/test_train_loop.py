@@ -4,7 +4,6 @@ import shutil
 
 import jax
 import numpy as np
-import pytest
 
 from repro.checkpoint import store
 from repro.coord.registry import PaxosRegistry
