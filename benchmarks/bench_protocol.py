@@ -18,6 +18,11 @@ from __future__ import annotations
 
 import json
 
+try:                                 # python -m benchmarks.run (package)
+    from benchmarks import bench_vector
+except ImportError:                  # python benchmarks/bench_protocol.py
+    import bench_vector
+
 from repro.core import checkers
 from repro.core.node import ProtocolConfig
 from repro.core.sim import Cluster, NetConfig, workload
@@ -125,12 +130,35 @@ def bench_availability():
             "total_completed": len(cl.history)}
 
 
+def bench_serve_path(n_ops=160, keys=24, seed=11):
+    """Scalar vs batched cluster throughput: client ops/s at n=5 replicas,
+    mixed op classes, identical seeded schedule — the tracked number for
+    the end-to-end serve path (repro.serve.paxos).
+
+    Delegates to :func:`bench_vector.bench_e2e` (one shared
+    scalar-vs-batched harness, completions-identical asserted before any
+    timing is reported — see its docstring) and reduces to the ratio, so
+    the speedup (or, on a host backend where jit dispatch dominates tiny
+    lane counts, the slowdown) is a single tracked number.
+    """
+    rows = bench_vector.bench_e2e(n_ops=n_ops, keys=keys, seed=seed,
+                                  sessions=8)
+    for row in rows:
+        row["ticks_per_op"] = round(row["ticks"]
+                                    / max(row["completed"], 1), 2)
+    return {"rows": rows,
+            "batched_over_scalar": round(rows[1]["client_ops_per_s"]
+                                         / max(rows[0]["client_ops_per_s"],
+                                               1), 3)}
+
+
 def main():
     out = {
         "rmw_modes": bench_rmw_modes(),
         "op_classes": bench_op_classes(),
         "rare_replies": bench_rare_replies(),
         "availability": bench_availability(),
+        "serve_path": bench_serve_path(),
     }
     print(json.dumps(out, indent=1))
     return out

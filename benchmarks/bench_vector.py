@@ -20,6 +20,12 @@ through the batched proposer engine
 (:func:`repro.core.proposer_vector.proposer_step` — tallies, quorum
 arbitration and emissions over session lanes).
 
+The **e2e lane** measures whole client ops/s through
+``Cluster(machine_cls=BatchedMachine)`` — the end-to-end batched serve
+path (ingest scheduler + both engines + host bridge,
+:mod:`repro.serve.paxos`) — against the scalar cluster on the identical
+seeded schedule, with a completions-identical assertion.
+
 ``--smoke`` runs tiny shapes through the Pallas kernel in interpret mode
 with a kernel-vs-oracle equality check — wired into scripts/check.sh —
 and writes the results as machine-readable JSON (``BENCH_smoke.json`` by
@@ -244,6 +250,61 @@ def bench_issuer(n_lanes: int, iters: int = 30, n_machines: int = 5,
             "us_per_batch": round(best * 1e6)}
 
 
+def bench_e2e(n_ops: int = 60, keys: int = 8, seed: int = 5,
+              sessions: int = 4, rmw_frac: float = 0.4,
+              write_frac: float = 0.3):
+    """End-to-end client ops/s: scalar vs batched cluster (serve path).
+
+    Unlike the lane microbenches above, this drives whole client ops
+    through ``Cluster(machine_cls=BatchedMachine)`` — ingest scheduler,
+    receiver engine, issuer engine, host bridge — and through the scalar
+    cluster on the identical seeded schedule, asserting the completions
+    match before reporting throughput.  This is the perf-trajectory lane
+    for the paper's deployment shape (§2): client ops/s at n=5 replicas
+    under a mixed RMW/write/read workload.
+    """
+    from repro.core import checkers
+    from repro.core.node import Machine, ProtocolConfig
+    from repro.core.sim import (
+        Cluster, NetConfig, completion_tuples, workload,
+    )
+    from repro.serve.paxos import BatchedMachine
+
+    rows, ref = [], None
+    for impl, mcls in (("scalar", Machine), ("batched", BatchedMachine)):
+        cl = Cluster(ProtocolConfig(n_machines=5,
+                                    sessions_per_machine=sessions),
+                     NetConfig(seed=seed), machine_cls=mcls)
+        workload(cl, n_ops=n_ops, keys=keys, seed=seed,
+                 rmw_frac=rmw_frac, write_frac=write_frac)
+        t0 = time.time()
+        # correctness gates raise (not assert): this feeds the CI
+        # perf-trajectory artifact and must fail under python -O too
+        if not cl.run_until_quiet(max_ticks=200_000):
+            raise RuntimeError(f"e2e {impl} cluster did not quiesce")
+        dt = time.time() - t0
+        checkers.check_all(cl)
+        comps = completion_tuples(cl)
+        if ref is None:
+            ref = comps
+        elif comps != ref:
+            raise RuntimeError("batched cluster diverged from scalar")
+        row = {"impl": impl, "completed": len(cl.history),
+               "client_ops_per_s": round(len(cl.history) / dt),
+               "wall_s": round(dt, 3), "ticks": cl.rounds}
+        if mcls is BatchedMachine:
+            agg = {}
+            for m in cl.machines:
+                for k, v in m.engine_stats.items():
+                    agg[k] = agg.get(k, 0) + v
+            row["receiver_lanes_per_batch"] = round(
+                agg["receiver_lanes"] / max(agg["receiver_batches"], 1), 2)
+            row["issuer_lanes_per_batch"] = round(
+                agg["issuer_lanes"] / max(agg["issuer_batches"], 1), 2)
+        rows.append(row)
+    return rows
+
+
 def check_kernel_matches_oracle(n_keys: int = 256, seed: int = 5):
     """One mixed full-vocabulary batch: Pallas (interpret) == pure jnp."""
     kv, msg, reg = random_tables(n_keys, seed=seed)
@@ -285,6 +346,7 @@ def main(argv=None):
             "op_classes": bench_op_classes_checked(n, iters=20,
                                                    use_kernel=True),
             "issuer": [bench_issuer(n, iters=10)],
+            "e2e": bench_e2e(),
         }
         out = args.json or "BENCH_smoke.json"
         with open(out, "w") as fh:
@@ -300,6 +362,7 @@ def main(argv=None):
     rows["throughput"].append(bench(65_536, iters=3, use_kernel=True))
     rows["op_classes"] = bench_op_classes_checked(65_536)
     rows["issuer"] = [bench_issuer(n) for n in (4096, 65_536)]
+    rows["e2e"] = bench_e2e(n_ops=200, keys=16, sessions=8)
     if args.json:
         with open(args.json, "w") as fh:
             json.dump(rows, fh, indent=1)

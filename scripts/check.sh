@@ -10,6 +10,11 @@ python -m pytest -q "$@"
 # benchmarks/bench_vector.py); writes BENCH_smoke.json, which CI uploads
 # as the perf-trajectory artifact (.github/workflows/ci.yml)
 python benchmarks/bench_vector.py --smoke
+# Batched-cluster smoke: >= 20 seeded faulty workloads (crash/restart and
+# all-aboard included) on Cluster(machine_cls=BatchedMachine), asserting
+# completions identical to the scalar cluster + linearizability checkers
+# green (see scripts/batched_smoke.py)
+python scripts/batched_smoke.py
 # Lint gate (mirrors CI's lint job); skipped when ruff isn't installed
 if command -v ruff >/dev/null 2>&1; then
   ruff check .

@@ -35,12 +35,17 @@ from repro.core.types import RmwOp
 
 class PaxosRegistry:
     def __init__(self, n_machines: int = 5, *, all_aboard: bool = True,
-                 net: Optional[NetConfig] = None, sessions: int = 8):
+                 net: Optional[NetConfig] = None, sessions: int = 8,
+                 machine_cls: Optional[type] = None):
+        """``machine_cls`` selects the replica implementation — pass
+        :class:`repro.serve.paxos.BatchedMachine` to serve every
+        coordination op through the batched two-engine path."""
+        kw = {} if machine_cls is None else {"machine_cls": machine_cls}
         self.cluster = Cluster(
             ProtocolConfig(n_machines=n_machines,
                            sessions_per_machine=sessions,
                            all_aboard=all_aboard),
-            net or NetConfig(seed=0))
+            net or NetConfig(seed=0), **kw)
         self._rr = itertools.count()
         self._keys: Dict[str, int] = {}
         self._next_key = itertools.count(1)

@@ -111,7 +111,16 @@ class Machine:
         # rmw-id counters carry the session *incarnation* in their high bits:
         # a restarted machine (fresh volatile state) must never reuse an
         # rmw-id, or the registry would treat its new RMWs as committed.
-        self.rmw_counters = [incarnation << 32] * cfg.sessions_per_machine
+        # The shift keeps counters inside int32 — rmw-ids live in int32
+        # lanes of both SIMD engines (KVTable/ProposerTable planes), so a
+        # 1<<32 incarnation stride would silently wrap there.  Fail loudly
+        # at the boundary instead: 128 << 24 is the first overflow.
+        if not 0 <= incarnation < 128:
+            raise ValueError(
+                f"incarnation {incarnation} out of range [0, 128): the "
+                f"1<<24 rmw-id stride would overflow the engines' int32 "
+                f"lanes — rejoin as a new member instead")
+        self.rmw_counters = [incarnation << 24] * cfg.sessions_per_machine
         self.inbox: Deque[object] = deque()
         self.fifos: List[Deque[Request]] = [deque() for _ in
                                             range(cfg.sessions_per_machine)]
@@ -288,6 +297,14 @@ class Machine:
         if req.kind == ReqKind.RMW:
             le = self.entries[sess]
             self.rmw_counters[sess] += 1
+            if self.rmw_counters[sess] >= (self.incarnation + 1) << 24:
+                # the counter half of the rmw-id space is 24 bits per
+                # incarnation (engines' int32 lanes); crossing into the
+                # next incarnation's stride would let a future restart
+                # reissue committed rmw-ids — fail loudly instead
+                raise RuntimeError(
+                    f"session {sess} exhausted its 1<<24 rmw-id space for "
+                    f"incarnation {self.incarnation}")
             fresh = LocalEntry(sess=sess, gsess=le.gsess)
             fresh.key, fresh.op, fresh.arg1, fresh.arg2 = (
                 req.key, req.op, req.arg1, req.arg2)
@@ -388,19 +405,32 @@ class Machine:
         self._trace_reply(le.sess, rep)
         le.tally.note(rep)
 
+    # Machine subclasses that keep live issuer lanes (the batched serve
+    # machine) set this True so round events are built even when the trace
+    # tap is off; the scalar machine skips the construction entirely.
+    _wants_round_events = False
+
     def _trace_rmw_round(self, le: LocalEntry, phase: Phase, *, ts: TS,
                          log_no: int, rmw_id: RmwId, value: Optional[int],
                          base_ts: TS, val_log: int, aboard: bool = False,
                          helping: bool = False) -> None:
-        if self.issuer_trace is None:
+        if self.issuer_trace is None and not self._wants_round_events:
             return
-        self.issuer_trace.append(RmwRound(
+        self._note_rmw_round(RmwRound(
             sess=le.sess, phase=phase, lid=le.lid, key=le.key, ts=ts,
             log_no=log_no, rmw_id=rmw_id,
             value=0 if value is None else value,
             has_value=0 if value is None else 1,
             base_ts=base_ts, val_log=val_log, aboard=int(aboard),
             helping=int(helping), lth_counter=le.log_too_high_counter))
+
+    def _note_rmw_round(self, ev: RmwRound) -> None:
+        """Round-start hook: every propose/accept/commit broadcast reloads
+        the session's issuer lane.  The scalar machine only records it for
+        the differential replay; the batched machine (serve/paxos) overrides
+        this to reload its live ProposerTable lane."""
+        if self.issuer_trace is not None:
+            self.issuer_trace.append(ev)
 
     def _bcast_proposes(self, le: LocalEntry, local_ack: bool) -> None:
         le.state = LEState.PROPOSED
@@ -570,23 +600,26 @@ class Machine:
             self._trace_decision(le.sess, d, self._help_payload(payload))
             self._begin_help(le, payload)
         elif d == Decision.RECOMMIT:
-            # §8.7: the previous slot's commit may have been lost with its
-            # issuer; re-broadcast it from our local last-committed state.
             self._trace_decision(le.sess, d)
-            le.log_too_high_counter = 0
-            kv = get_kv(self.kvs, le.key)
-            le.help.rmw_id = kv.last_committed_rmw_id
-            le.help.value = kv.value
-            le.help.base_ts = kv.base_ts
-            le.help.log_no = kv.last_committed_log_no
-            le.help.val_log = kv.val_log
-            le.state = LEState.BCAST_COMMITS_FROM_HELP
-            le.all_acked = False
-            self.bump("log_too_high_recommit")
+            self._apply_recommit(le)
         elif d == Decision.RETRY_LOG_TOO_HIGH:
             self._trace_decision(le.sess, d)
             le.log_too_high_counter += 1
             self._enter_retry(le)
+
+    def _apply_recommit(self, le: LocalEntry) -> None:
+        """§8.7: the previous slot's commit may have been lost with its
+        issuer; re-broadcast it from our local last-committed state."""
+        le.log_too_high_counter = 0
+        kv = get_kv(self.kvs, le.key)
+        le.help.rmw_id = kv.last_committed_rmw_id
+        le.help.value = kv.value
+        le.help.base_ts = kv.base_ts
+        le.help.log_no = kv.last_committed_log_no
+        le.help.val_log = kv.val_log
+        le.state = LEState.BCAST_COMMITS_FROM_HELP
+        le.all_acked = False
+        self.bump("log_too_high_recommit")
 
     def _begin_help(self, le: LocalEntry, rep: Reply) -> None:
         """§6: help the accept with the highest accepted-TS."""
@@ -663,11 +696,7 @@ class Machine:
             le.all_acked = t.acks >= self.cfg.n_machines
             self._trace_decision(le.sess, d, self._commit_bcast_payload(
                 le, helping, le.all_acked))
-            if le.all_aboard and le.all_acked:
-                self.bump("all_aboard_successes")
-            le.state = (LEState.BCAST_COMMITS_FROM_HELP if helping
-                        else LEState.BCAST_COMMITS)
-            le.round_age = 0
+            self._apply_commit_bcast(le, helping)
         elif d == Decision.RETRY:
             self._trace_decision(le.sess, d, self._retry_payload(t))
             if t.seen_higher is not None:
@@ -676,6 +705,15 @@ class Machine:
             if le.all_aboard:
                 self.bump("all_aboard_fallbacks")
             self._enter_retry(le)
+
+    def _apply_commit_bcast(self, le: LocalEntry, helping: bool) -> None:
+        """Accept quorum reached (``le.all_acked`` already set): schedule
+        the commit broadcast for the next inspection."""
+        if le.all_aboard and le.all_acked:
+            self.bump("all_aboard_successes")
+        le.state = (LEState.BCAST_COMMITS_FROM_HELP if helping
+                    else LEState.BCAST_COMMITS)
+        le.round_age = 0
 
     def _stop_helping(self, le: LocalEntry) -> None:
         self._trace_pause(le.sess)
@@ -827,6 +865,11 @@ class Machine:
             quorum_is_majority=self.cfg.commit_ack_quorum_is_majority)
         if d == Decision.WAIT:
             return
+        self._finish_commit(le, d)
+
+    def _finish_commit(self, le: LocalEntry,
+                       d: Decision = Decision.COMMIT_DONE) -> None:
+        """Commit-ack quorum reached: apply the commit locally (§8.7)."""
         self._trace_decision(le.sess, d)
         kv = get_kv(self.kvs, le.key)
         if not le.commit_from_help:
@@ -908,9 +951,9 @@ class Machine:
 
     def _trace_abd_round(self, ab: AbdEntry, *, rep_bits: int = 0,
                          store_bits: int = 0) -> None:
-        if self.issuer_trace is None:
+        if self.issuer_trace is None and not self._wants_round_events:
             return
-        self.issuer_trace.append(AbdRound(
+        self._note_abd_round(AbdRound(
             sess=ab.sess, phase=ab.phase, lid=ab.lid, key=ab.key,
             value=(ab.best_value if ab.phase in (AbdPhase.R_QUERY,
                                                  AbdPhase.R_COMMIT)
@@ -922,6 +965,11 @@ class Machine:
             sent_base_ts=ab.sent_cs.base, sent_val_log=ab.sent_cs.log_no,
             log_no=ab.best_log_no, rmw_id=ab.best_rmw_id,
             rep_bits=rep_bits, store_bits=store_bits))
+
+    def _note_abd_round(self, ev: AbdRound) -> None:
+        """ABD phase-start hook — see :meth:`_note_rmw_round`."""
+        if self.issuer_trace is not None:
+            self.issuer_trace.append(ev)
 
     def _start_write(self, sess: int, req: Request) -> None:
         ab = self.abd[sess]

@@ -235,6 +235,34 @@ def decide_abd(ab: AbdEntry, *, majority: int) -> Decision:
 # proposer replay.
 # ---------------------------------------------------------------------------
 
+# Which ActionBatch planes a decision's payload pins down (mirrors the
+# payload dicts built below and in Machine._commit_bcast_payload /
+# Machine._abd_reply).  Shared by the differential replay (oracle side) and
+# the batched serve machine (live side, repro.serve.paxos.bridge).
+ACTION_PAYLOAD_KEYS = {
+    Decision.RETRY: ("sh_has", "ts_v", "ts_m"),
+    Decision.LOG_TOO_LOW: ("log_no", "rmw_cnt", "rmw_sess", "value",
+                           "base_v", "base_m", "val_log"),
+    Decision.HELP: ("ts_v", "ts_m", "rmw_cnt", "rmw_sess", "value",
+                    "base_v", "base_m", "val_log"),
+    Decision.HELP_SELF: ("ts_v", "ts_m", "rmw_cnt", "rmw_sess", "value",
+                         "base_v", "base_m", "val_log"),
+    Decision.COMMIT_BCAST: ("log_no", "rmw_cnt", "rmw_sess", "value",
+                            "has_value", "base_v", "base_m", "val_log"),
+    Decision.ABD_W2: ("key", "value", "base_v", "base_m"),
+    Decision.ABD_R_WB: ("key", "log_no", "rmw_cnt", "rmw_sess", "value",
+                        "base_v", "base_m", "val_log"),
+}
+
+# Wire MsgKind of the broadcast an engine-owned emission carries (the
+# ActionBatch ``bcast_kind`` plane).
+BCAST_KINDS = {
+    Decision.COMMIT_BCAST: int(MsgKind.COMMIT),
+    Decision.ABD_W2: int(MsgKind.WRITE),
+    Decision.ABD_R_WB: int(MsgKind.READ_COMMIT),
+}
+
+
 def retry_payload(t: Tally) -> Dict[str, int]:
     """RETRY: the max blocking proposed-TS observed (drives §8.4 TS bump)."""
     sh = t.seen_higher

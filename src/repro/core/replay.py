@@ -48,103 +48,38 @@ import numpy as np
 from . import handlers, proposer, proposer_vector, vector
 from .handlers import Registry, get_kv
 from .proposer import (
-    ABD_PAUSED, AbdEntry, AbdPhase, AbdRound, Decision, DecisionEvent,
-    PauseEvent, Phase, ReplyEvent, RmwRound,
+    ABD_PAUSED, ACTION_PAYLOAD_KEYS, AbdEntry, AbdPhase, AbdRound,
+    BCAST_KINDS, Decision, DecisionEvent, PauseEvent, Phase, ReplyEvent,
+    RmwRound,
 )
 from .sim import Cluster, NetConfig, workload
 from .node import ProtocolConfig
 from .types import (
-    Carstamp, KVPair, Msg, MsgKind, Rep, Reply, RmwId, RmwOp, Tally,
+    Carstamp, KVPair, Msg, MsgKind, Reply, RmwId, RmwOp, Tally,
+)
+
+# The scalar<->lane converters, issuer round-lane loaders and the
+# conflict-free bucketer live in repro.core.lanes, shared with the live
+# batched serve path (repro.serve.paxos) — single definitions, so the
+# replay oracle and the serving machine can never drift apart.
+from .lanes import (
+    LOG_OPS as _LOG_OPS, RMW_OPS as _RMW_OPS, TS_OPS as _TS_OPS,
+    VALUE_OPS as _VALUE_OPS, bucket_conflict_free, kv_to_lanes,
+    load_abd_round as _load_abd_round_lanes,
+    load_rmw_round as _load_rmw_round_lanes, msg_to_lanes, reply_to_lanes,
 )
 
 from repro.kernels.paxos_apply import ops
 
+__all__ = [
+    "ReplayMismatch", "bucket_conflict_free", "kv_to_lanes", "msg_to_lanes",
+    "reply_to_lanes", "replay_trace", "replay_cluster", "run_and_replay",
+    "replay_issuer_trace", "replay_issuer_cluster", "run_and_replay_issuer",
+]
+
 
 class ReplayMismatch(AssertionError):
     """The SIMD engine diverged from the scalar handlers on a trace."""
-
-
-# ---------------------------------------------------------------------------
-# scalar <-> lane conversions (full message vocabulary)
-# ---------------------------------------------------------------------------
-
-def kv_to_lanes(kv: KVPair) -> Dict[str, int]:
-    """One KVPair -> one lane of every KVTable plane."""
-    return dict(
-        state=int(kv.state), log_no=kv.log_no,
-        last_log=kv.last_committed_log_no,
-        prop_v=kv.proposed_ts.version, prop_m=kv.proposed_ts.mid,
-        acc_v=kv.accepted_ts.version, acc_m=kv.accepted_ts.mid,
-        acc_val=kv.accepted_value,
-        acc_base_v=kv.acc_base_ts.version, acc_base_m=kv.acc_base_ts.mid,
-        rmw_cnt=kv.rmw_id.counter, rmw_sess=kv.rmw_id.gsess,
-        value=kv.value, base_v=kv.base_ts.version, base_m=kv.base_ts.mid,
-        val_log=kv.val_log,
-        last_rmw_cnt=kv.last_committed_rmw_id.counter,
-        last_rmw_sess=kv.last_committed_rmw_id.gsess,
-    )
-
-
-def reply_to_lanes(rep: Reply) -> Dict[str, int]:
-    """One steered reply -> one lane of every IssuerReplyBatch plane."""
-    return dict(
-        kind=int(rep.kind), opcode=int(rep.opcode), src=rep.src, lid=rep.lid,
-        ts_v=rep.ts.version, ts_m=rep.ts.mid, log_no=rep.log_no,
-        rmw_cnt=rep.rmw_id.counter, rmw_sess=rep.rmw_id.gsess,
-        value=0 if rep.value is None else rep.value,
-        base_v=rep.base_ts.version, base_m=rep.base_ts.mid,
-        val_log=rep.val_log,
-    )
-
-
-def msg_to_lanes(msg: Msg) -> Dict[str, int]:
-    """One wire message -> one lane of every MsgBatch plane."""
-    return dict(
-        kind=vector.VEC_KIND[msg.kind],
-        ts_v=msg.ts.version, ts_m=msg.ts.mid, log_no=msg.log_no,
-        rmw_cnt=msg.rmw_id.counter, rmw_sess=msg.rmw_id.gsess,
-        value=msg.value if msg.value is not None else 0,
-        base_v=msg.base_ts.version, base_m=msg.base_ts.mid,
-        val_log=msg.val_log,
-        has_value=0 if msg.value is None else 1,
-    )
-
-
-# ---------------------------------------------------------------------------
-# conflict-free bucketing
-# ---------------------------------------------------------------------------
-
-_COMMIT_KINDS = (MsgKind.COMMIT, MsgKind.READ_COMMIT)
-_REG_READERS = (MsgKind.PROPOSE, MsgKind.ACCEPT)
-
-
-def bucket_conflict_free(trace: Sequence[Msg]) -> List[List[Msg]]:
-    """Greedily pack a per-machine message trace into conflict-free batches.
-
-    Flushes the open batch when (a) the next message's key already has a
-    message in it, or (b) the next message is a PROPOSE/ACCEPT whose rmw-id
-    a commit earlier in the open batch just registered (in-batch registry
-    visibility, see module docstring).
-    """
-    batches: List[List[Msg]] = []
-    cur: List[Msg] = []
-    keys_in_cur: set = set()
-    reg_in_cur: Dict[int, int] = {}
-    for msg in trace:
-        needs_reg_flush = (
-            msg.kind in _REG_READERS and msg.rmw_id.gsess >= 0
-            and reg_in_cur.get(msg.rmw_id.gsess, -1) >= msg.rmw_id.counter)
-        if msg.key in keys_in_cur or needs_reg_flush:
-            batches.append(cur)
-            cur, keys_in_cur, reg_in_cur = [], set(), {}
-        cur.append(msg)
-        keys_in_cur.add(msg.key)
-        if msg.kind in _COMMIT_KINDS and msg.rmw_id.gsess >= 0:
-            reg_in_cur[msg.rmw_id.gsess] = max(
-                reg_in_cur.get(msg.rmw_id.gsess, -1), msg.rmw_id.counter)
-    if cur:
-        batches.append(cur)
-    return batches
 
 
 def batch_to_msgbatch(batch: Sequence[Msg], n_keys: int) -> vector.MsgBatch:
@@ -160,15 +95,9 @@ def batch_to_msgbatch(batch: Sequence[Msg], n_keys: int) -> vector.MsgBatch:
 
 
 # ---------------------------------------------------------------------------
-# reply comparison (fields meaningful per opcode, mirroring the wire format)
+# reply comparison (fields meaningful per opcode, mirroring the wire format;
+# opcode groups shared with repro.serve.paxos.bridge.reply_from_lanes)
 # ---------------------------------------------------------------------------
-
-_TS_OPS = (Rep.SEEN_HIGHER_PROP, Rep.SEEN_HIGHER_ACC, Rep.SEEN_LOWER_ACC)
-_VALUE_OPS = (Rep.LOG_TOO_LOW, Rep.SEEN_LOWER_ACC, Rep.ACK_BASE_TS_STALE,
-              Rep.CARSTAMP_TOO_LOW)
-_RMW_OPS = (Rep.LOG_TOO_LOW, Rep.SEEN_LOWER_ACC, Rep.CARSTAMP_TOO_LOW)
-_LOG_OPS = (Rep.LOG_TOO_LOW, Rep.CARSTAMP_TOO_LOW)
-
 
 def _expected_reply_lanes(rep) -> Dict[str, int]:
     """The ReplyBatch lanes a scalar Reply pins down (others are free)."""
@@ -329,47 +258,11 @@ def run_and_replay(seed: int, *, n_ops: int = 24, keys: int = 3,
 # after every reply batch that decisions, emissions and every table plane
 # agree.
 
-_TALLY_PLANES = (
-    "rep_bits", "ack_bits", "rmw_flag", "rmw_nb_flag", "lth_flag",
-    "sh_has", "sh_v", "sh_m",
-    "ltl_has", "ltl_log", "ltl_cnt", "ltl_sess", "ltl_val",
-    "ltl_base_v", "ltl_base_m", "ltl_vlog",
-    "la_has", "la_ts_v", "la_ts_m", "la_cnt", "la_sess", "la_val",
-    "la_base_v", "la_base_m", "la_vlog",
-    "fr_has", "fr_val", "fr_base_v", "fr_base_m", "fr_log",
-)
-
-_ABD_PLANES = (
-    "abd_phase", "abd_lid", "abd_key", "abd_value",
-    "abd_rep_bits", "abd_ack_bits", "abd_store_bits",
-    "abd_maxb_v", "abd_maxb_m",
-    "abd_sent_base_v", "abd_sent_base_m", "abd_sent_vlog",
-    "best_base_v", "best_base_m", "best_vlog",
-    "best_val", "best_log", "best_cnt", "best_sess",
-)
-
-# ActionBatch planes a decision's payload pins down (mirrors the payload
-# dicts recorded by Machine/_SessShadow)
-_ACTION_KEYS = {
-    Decision.RETRY: ("sh_has", "ts_v", "ts_m"),
-    Decision.LOG_TOO_LOW: ("log_no", "rmw_cnt", "rmw_sess", "value",
-                           "base_v", "base_m", "val_log"),
-    Decision.HELP: ("ts_v", "ts_m", "rmw_cnt", "rmw_sess", "value",
-                    "base_v", "base_m", "val_log"),
-    Decision.HELP_SELF: ("ts_v", "ts_m", "rmw_cnt", "rmw_sess", "value",
-                         "base_v", "base_m", "val_log"),
-    Decision.COMMIT_BCAST: ("log_no", "rmw_cnt", "rmw_sess", "value",
-                            "has_value", "base_v", "base_m", "val_log"),
-    Decision.ABD_W2: ("key", "value", "base_v", "base_m"),
-    Decision.ABD_R_WB: ("key", "log_no", "rmw_cnt", "rmw_sess", "value",
-                        "base_v", "base_m", "val_log"),
-}
-
-_BCAST_KIND = {
-    Decision.COMMIT_BCAST: int(MsgKind.COMMIT),
-    Decision.ABD_W2: int(MsgKind.WRITE),
-    Decision.ABD_R_WB: int(MsgKind.READ_COMMIT),
-}
+# ActionBatch planes a decision's payload pins down, and the wire kind of
+# engine-owned emissions — canonical tables in repro.core.proposer, shared
+# with the live batched dispatch (repro.serve.paxos.machine).
+_ACTION_KEYS = ACTION_PAYLOAD_KEYS
+_BCAST_KIND = BCAST_KINDS
 
 
 def _bits(srcs) -> int:
@@ -582,50 +475,6 @@ class _SessShadow:
             best_vlog=ab.best_cs.log_no, best_val=ab.best_value,
             best_log=ab.best_log_no, best_cnt=ab.best_rmw_id.counter,
             best_sess=ab.best_rmw_id.gsess)
-
-
-def _load_rmw_round_lanes(lanes: Dict[str, np.ndarray], ev: RmwRound) -> None:
-    i = ev.sess
-    lanes["phase"][i] = int(ev.phase)
-    lanes["lid"][i] = ev.lid
-    lanes["aboard"][i], lanes["helping"][i] = ev.aboard, ev.helping
-    lanes["lth_counter"][i] = ev.lth_counter
-    lanes["key"][i] = ev.key
-    lanes["ts_v"][i], lanes["ts_m"][i] = ev.ts.version, ev.ts.mid
-    lanes["log_no"][i] = ev.log_no
-    lanes["rmw_cnt"][i] = ev.rmw_id.counter
-    lanes["rmw_sess"][i] = ev.rmw_id.gsess
-    lanes["value"][i], lanes["has_value"][i] = ev.value, ev.has_value
-    lanes["base_v"][i], lanes["base_m"][i] = (ev.base_ts.version,
-                                              ev.base_ts.mid)
-    lanes["val_log"][i] = ev.val_log
-    for f in _TALLY_PLANES:
-        lanes[f][i] = proposer_vector.TABLE_DEFAULTS[f]
-
-
-def _load_abd_round_lanes(lanes: Dict[str, np.ndarray], ev: AbdRound) -> None:
-    i = ev.sess
-    for f in _ABD_PLANES:
-        lanes[f][i] = proposer_vector.TABLE_DEFAULTS[f]
-    lanes["abd_phase"][i] = int(ev.phase)
-    lanes["abd_lid"][i], lanes["abd_key"][i] = ev.lid, ev.key
-    lanes["abd_value"][i] = ev.value
-    lanes["abd_rep_bits"][i] = ev.rep_bits
-    lanes["abd_store_bits"][i] = ev.store_bits
-    if ev.phase in (AbdPhase.W_QUERY, AbdPhase.W_WRITE):
-        lanes["abd_maxb_v"][i] = ev.base_ts.version
-        lanes["abd_maxb_m"][i] = ev.base_ts.mid
-    else:
-        lanes["best_base_v"][i] = ev.base_ts.version
-        lanes["best_base_m"][i] = ev.base_ts.mid
-        lanes["best_vlog"][i] = ev.val_log
-        lanes["best_val"][i] = ev.value
-        lanes["best_log"][i] = ev.log_no
-        lanes["best_cnt"][i] = ev.rmw_id.counter
-        lanes["best_sess"][i] = ev.rmw_id.gsess
-        lanes["abd_sent_base_v"][i] = ev.sent_base_ts.version
-        lanes["abd_sent_base_m"][i] = ev.sent_base_ts.mid
-        lanes["abd_sent_vlog"][i] = ev.sent_val_log
 
 
 def replay_issuer_trace(events: Sequence[object], *, cfg: ProtocolConfig

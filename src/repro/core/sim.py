@@ -117,13 +117,17 @@ class Cluster:
     """
 
     def __init__(self, cfg: Optional[ProtocolConfig] = None,
-                 net: Optional[NetConfig] = None):
+                 net: Optional[NetConfig] = None,
+                 machine_cls: type = Machine):
         self.cfg = cfg or ProtocolConfig()
         self.netcfg = net or NetConfig()
         self.network = Network(self.netcfg, self.cfg.n_machines)
+        # machine_cls is any Machine-interface replica implementation; the
+        # batched serve path plugs in repro.serve.paxos.BatchedMachine here.
+        self.machine_cls = machine_cls
         self.machines: List[Machine] = [
-            Machine(mid, self.cfg, self.network.send,
-                    lambda: self.network.now)
+            machine_cls(mid, self.cfg, self.network.send,
+                        lambda: self.network.now)
             for mid in range(self.cfg.n_machines)
         ]
         self.completions: List[Tuple[int, int, Completion]] = []  # (mid, sess, c)
@@ -192,9 +196,9 @@ class Cluster:
         already committed).
         """
         old = self.machines[mid]
-        fresh = Machine(mid, self.cfg, self.network.send,
-                        lambda: self.network.now,
-                        incarnation=old.incarnation + 1)
+        fresh = self.machine_cls(mid, self.cfg, self.network.send,
+                                 lambda: self.network.now,
+                                 incarnation=old.incarnation + 1)
         fresh.kvs = old.kvs
         fresh.registry = old.registry
         fresh.write_clock = old.write_clock
@@ -257,6 +261,20 @@ class Cluster:
                 out[k] = out.get(k, 0) + v
         out.update({f"net_{k}": v for k, v in self.network.stats.items()})
         return out
+
+
+def completion_tuples(cluster: Cluster) -> List[Tuple]:
+    """Full-fidelity completion projection, in completion order.
+
+    THE equivalence gate for alternative Machine implementations: two
+    clusters are "completion-for-completion identical" iff these lists are
+    equal (same machines, sessions, tags, op kinds, keys, read values,
+    commit carstamps and rmw-ids, in the same order).  Single definition so
+    every gate — tests, benches, scripts/batched_smoke.py — compares the
+    whole completion, not a stale subset.
+    """
+    return [(mid, sess, c.tag, c.kind, c.key, c.value, c.carstamp, c.rmw_id)
+            for mid, sess, c in cluster.completions]
 
 
 def workload(cluster: Cluster, *, n_ops: int, keys: int,

@@ -1,9 +1,10 @@
 """Batched decode engine with a Paxos-routed session table.
 
 The serving router state (session -> replica) lives in the replicated
-register: route updates are CAS RMWs, lookups are ABD reads (the paper's
-25x-cheaper path), so routing survives any minority of router failures
-with zero election downtime.
+register: a session's route is claimed-or-discovered with a single
+CAS-with-fetch RMW (the CAS returns the pre-state, §4) and is write-once,
+so repeat lookups hit a local cache; routing survives any minority of
+router failures with zero election downtime.
 """
 
 from __future__ import annotations
@@ -34,18 +35,30 @@ class DecodeEngine:
         self.cfg = cfg
         self.registry = registry
         self.replica_id = replica_id
+        self._routes: Dict[int, int] = {}    # write-once decided routes
         self._decode = jax.jit(model.decode_step)
 
     def route(self, session: int) -> int:
-        """Sticky session routing through the replicated register."""
+        """Sticky session routing through the replicated register.
+
+        First sight of a session costs ONE CAS-with-fetch round trip: a
+        CAS RMW always returns the pre-state (§4), so claiming an unrouted
+        session and discovering an existing route are the *same* consensus
+        op — no read-then-CAS double round trip, and no window for two
+        replicas to both read 0.  Routes are write-once (the CAS only
+        installs over 0), so the decided route is cached locally and
+        repeat lookups are free.
+        """
         if self.registry is None:
             return self.replica_id
-        key = f"route/{session}"
-        cur = self.registry.read(key)
-        if cur == 0:
-            won, prev = self.registry.cas(key, 0, self.replica_id + 1)
-            return (self.replica_id if won else prev - 1)
-        return cur - 1
+        cached = self._routes.get(session)
+        if cached is not None:
+            return cached
+        _won, prev = self.registry.cas(f"route/{session}", 0,
+                                       self.replica_id + 1)
+        decided = self.replica_id if prev == 0 else prev - 1
+        self._routes[session] = decided
+        return decided
 
     def generate(self, prompts: List[List[int]], steps: int,
                  prefill_extra: Optional[Dict] = None) -> np.ndarray:

@@ -1,0 +1,74 @@
+"""Batched-machine serve subsystem: the end-to-end SIMD serve path.
+
+PRs 3–4 batched both halves of a simulated machine in isolation — the
+receiver (:mod:`repro.core.vector` + the ``paxos_apply`` Pallas kernel) and
+the issuer (:mod:`repro.core.proposer_vector`) — but only behind the
+differential replay harness.  This package wires them together into a live
+replica, :class:`~.machine.BatchedMachine`, that serves real (simulated)
+traffic: ``Cluster(machine_cls=BatchedMachine)`` runs every existing
+workload — crash/restart, partitions, all-aboard deployments — unchanged
+and completion-for-completion identical to the scalar cluster.
+
+Architecture: the two-engine tick
+=================================
+
+One worker-loop iteration (§3.1.3) of a batched machine::
+
+      inbox ──▶ IngestScheduler ──▶ conflict-free batches
+                 (per-key FIFOs,         │
+                  strict order /         ▼
+                  aging fairness)   ┌─────────────────────────────┐
+      wire msgs ──────────────────▶ │ receiver engine             │──▶ replies
+                                    │ ops.replica_step over the   │    (out, in
+                                    │ KVBridge planes (1 lane/key)│     arrival
+                                    └─────────────────────────────┘     order)
+                                    ┌─────────────────────────────┐
+      steered replies ────────────▶ │ issuer engine               │──▶ ActionBatch
+        (SteeringTable: lid→lane)   │ proposer_step over the      │    decisions
+                                    │ ProposerTable (1 lane/sess) │
+                                    └─────────────────────────────┘
+                                                 │
+      host dispatch (scalar code, bridge views): ▼
+      grab/steal/help (§4.1/§5/§6), accept values (§8.5/§10.1), local
+      commits, retries — then inspection timers and FIFO probing, which
+      start new rounds and reload the issuer lanes.
+
+The host-bridge contract
+========================
+
+The engines are pure and lane-parallel; everything needing cross-lane
+gather/scatter is a *host* responsibility, mediated by :mod:`.bridge`:
+
+* **KV state** — authoritative in the :class:`~.bridge.KVBridge` planes
+  (the receiver engine's ``KVTable``).  Host actions check out scalar
+  ``KVPair`` views, run the *unchanged* ``Machine`` code paths on them, and
+  the bridge scatters them back before the next engine step.
+* **Registry** — authoritative host-side (scalar ``Registry``); mirrored
+  into the engine's ``registered`` plane per receiver step, and the
+  engine's commit-lane registrations are absorbed back after it.
+* **Issuer lanes** — round starts (every broadcast) reload the session's
+  ProposerTable lane via the ``_note_*_round`` hooks; host-initiated round
+  abandonment parks the lane (``PAUSED``) exactly where the scalar machine
+  stops gathering replies.  Decision *payloads* come back as ActionBatch
+  lanes — the same planes the differential replay asserts against the
+  scalar oracle, so live dispatch and replay can never drift apart.
+
+Why the batched cluster is completion-identical to the scalar one
+=================================================================
+
+Messages and replies cross-couple only through the KV store + registry, so
+the machine flushes at every message/reply run boundary of the inbox; the
+ingest scheduler's strict mode never lets an item overtake another; and
+host actions dispatch in arrival order.  Every send therefore happens in
+exactly the order the scalar machine would send it, the simulated network
+consumes its RNG identically, and the whole cluster evolves the same
+schedule — with the per-lane transitions themselves already proven
+equivalent, plane-for-plane, by :mod:`repro.core.replay`.
+"""
+
+from .bridge import KVBridge, SteeringTable
+from .machine import BatchedMachine
+from .scheduler import IngestScheduler, bucket_conflict_free
+
+__all__ = ["BatchedMachine", "IngestScheduler", "KVBridge",
+           "SteeringTable", "bucket_conflict_free"]

@@ -1,0 +1,192 @@
+"""Host-side bridges between scalar machine state and the SIMD engines.
+
+The two batched engines are deliberately lane-parallel and pure: the
+receiver step (:func:`repro.kernels.paxos_apply.ops.replica_step`) and the
+issuer step (:func:`repro.core.proposer_vector.proposer_step`) never touch
+anything that needs gather/scatter across lanes.  Everything that does is
+the *host bridge*, defined here:
+
+* :class:`KVBridge` — the per-key KV/registry gather–scatter bridge.  The
+  authoritative KV-pair metadata lives in struct-of-arrays planes (the
+  receiver engine's :class:`~repro.core.vector.KVTable`); host decisions
+  (grabbing the pair §4.1/§5, computing accept values §8.5/§10.1, local
+  commits) *check out* scalar :class:`~repro.core.types.KVPair` views of
+  single lanes, mutate them with the unchanged scalar code paths, and the
+  bridge scatters them back before the next engine step.  It quacks like
+  the ``Dict[int, KVPair]`` the scalar :class:`~repro.core.node.Machine`
+  uses, so ``handlers.get_kv`` and every host action work verbatim.
+
+* :class:`SteeringTable` — the lid -> session-lane reply-steering table
+  (§3.1.2): round starts register their lid on the issuing lane; inbound
+  network replies are routed to their :class:`ProposerTable` lane (staleness
+  itself is decided *inside* the engine by the lid/phase gates — the table
+  only picks the lane and drops out-of-range lids, exactly like the scalar
+  machine's ``lid & 0xFFFF`` steering).
+
+The scalar <-> lane converters and issuer round-lane loaders this bridge
+uses are defined in :mod:`repro.core.lanes` (shared with the differential
+replay harness so the live batched path and the replay oracle can never
+drift apart) and re-exported here as part of the bridge surface.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import vector
+from repro.core.handlers import Registry
+# The scalar<->lane converters, issuer round-lane loaders and ActionBatch
+# payload helpers are protocol-level and live in repro.core.lanes (shared
+# with the differential replay harness without any core -> serve import);
+# re-exported here because they are part of this bridge's public surface.
+from repro.core.lanes import (                                    # noqa: F401
+    ABD_PLANES, LOG_OPS, RMW_OPS, TALLY_PLANES, TS_OPS, VALUE_OPS,
+    action_payload, kv_to_lanes, lanes_to_kv, load_abd_round,
+    load_rmw_round, log_too_low_reply, lower_acc_reply, msg_to_lanes,
+    reply_from_lanes, reply_to_lanes,
+)
+from repro.core.types import KVPair
+
+I32 = np.int32
+
+
+# ---------------------------------------------------------------------------
+# The KV / registry gather-scatter bridge
+# ---------------------------------------------------------------------------
+
+_KV_DEFAULTS = kv_to_lanes(KVPair(key=0))
+
+
+class KVBridge:
+    """Authoritative KV-pair state as engine planes, with scalar views.
+
+    Quacks like the ``Dict[int, KVPair]`` the scalar machine host code uses
+    (``get`` always materializes a lane view — a fresh lane *is* a default
+    ``KVPair``, so create-on-read matches ``handlers.get_kv`` exactly).
+    Checked-out views stay live and mutable until the next engine step:
+    :meth:`to_table` scatters every view back into the planes, and
+    :meth:`absorb` replaces the planes with the engine's output and drops
+    all views (they would be stale).
+
+    Lane count grows on demand in powers of two so jit caches stay warm.
+    """
+
+    def __init__(self, n_keys: int = 8):
+        n = max(8, n_keys)
+        self.planes: Dict[str, np.ndarray] = {
+            f: np.full((n,), _KV_DEFAULTS[f], I32)
+            for f in vector.KVTable._fields}
+        self._views: Dict[int, KVPair] = {}
+
+    @property
+    def n_keys(self) -> int:
+        return int(self.planes["state"].shape[0])
+
+    def ensure(self, key: int) -> None:
+        """Grow the planes (power-of-two) to cover ``key``."""
+        if key < 0:
+            raise KeyError(f"negative key {key}")
+        n = self.n_keys
+        if key < n:
+            return
+        new_n = n
+        while key >= new_n:
+            new_n *= 2
+        for f in vector.KVTable._fields:
+            grown = np.full((new_n,), _KV_DEFAULTS[f], I32)
+            grown[:n] = self.planes[f]
+            self.planes[f] = grown
+
+    # -- dict-of-KVPair protocol (what handlers.get_kv / host code uses) ----
+
+    def get(self, key: int, default=None):
+        del default                      # a fresh lane IS a default KVPair
+        return self[key]
+
+    def __getitem__(self, key: int) -> KVPair:
+        kv = self._views.get(key)
+        if kv is None:
+            self.ensure(key)
+            kv = self._views[key] = lanes_to_kv(self.planes, key)
+        return kv
+
+    def __setitem__(self, key: int, kv: KVPair) -> None:
+        self.ensure(key)
+        self._views[key] = kv
+
+    def __contains__(self, key: int) -> bool:
+        return 0 <= key < self.n_keys
+
+    def keys(self):
+        return range(self.n_keys)
+
+    # -- engine boundary ------------------------------------------------------
+
+    def flush(self) -> None:
+        """Scatter every checked-out view back into the planes."""
+        for key, kv in self._views.items():
+            for f, v in kv_to_lanes(kv).items():
+                self.planes[f][key] = v
+
+    def to_table(self) -> vector.KVTable:
+        """Flush views and hand the planes to the engine."""
+        self.flush()
+        return vector.KVTable(*[jnp.asarray(self.planes[f])
+                                for f in vector.KVTable._fields])
+
+    def absorb(self, table: vector.KVTable) -> None:
+        """Adopt the engine's output planes; all views become stale."""
+        self._views.clear()
+        for f, plane in zip(vector.KVTable._fields, table):
+            self.planes[f] = np.array(plane, I32)
+
+    # -- registry mirror ------------------------------------------------------
+
+    @staticmethod
+    def registry_lanes(registry: Registry) -> jnp.ndarray:
+        """Host registry -> the per-global-session committed-counter plane."""
+        return jnp.asarray(registry.committed, jnp.int32)
+
+    @staticmethod
+    def absorb_registry(registry: Registry, lanes) -> None:
+        """Engine registrations (commit-lane scatter) -> host registry."""
+        registry.committed = [int(x) for x in np.asarray(lanes)]
+
+
+# ---------------------------------------------------------------------------
+# lid -> lane reply steering
+# ---------------------------------------------------------------------------
+
+class SteeringTable:
+    """Routes network replies into ProposerTable session lanes (§3.1.2).
+
+    Lids encode their issuing session in the low 16 bits (see
+    ``Machine._new_lid``); the table tracks which lids are *live* per lane
+    (current RMW round + current ABD round) purely for observability — the
+    engine's lid/phase gates are what actually drop stale replies, exactly
+    like the scalar tally's ``le.lid`` check.
+    """
+
+    def __init__(self, n_lanes: int):
+        self.n_lanes = n_lanes
+        self._live: List[List[int]] = [[0, 0] for _ in range(n_lanes)]
+        self.stats = {"steered": 0, "dropped": 0, "stale": 0}
+
+    def register(self, lane: int, lid: int, abd: bool = False) -> None:
+        if 0 <= lane < self.n_lanes:
+            self._live[lane][1 if abd else 0] = lid
+
+    def lane_of(self, lid: int) -> Optional[int]:
+        """The ProposerTable lane for a reply lid; None = drop (unroutable,
+        e.g. a reply to a session of a previous incarnation layout)."""
+        lane = lid & 0xFFFF
+        if not 0 <= lane < self.n_lanes:
+            self.stats["dropped"] += 1
+            return None
+        self.stats["steered"] += 1
+        if lid not in self._live[lane]:
+            self.stats["stale"] += 1     # engine lid-gates it to a no-op
+        return lane

@@ -1,0 +1,395 @@
+"""BatchedMachine: a replica whose tick is two SIMD engine steps.
+
+Drop-in replacement for the scalar :class:`repro.core.node.Machine`
+(``submit`` / ``deliver`` / ``step`` / ``crash``, stats, trace taps,
+``Cluster(machine_cls=BatchedMachine)``), but per tick the protocol hot
+paths run batched:
+
+* every inbound wire **message** is applied by the receiver engine —
+  :func:`repro.kernels.paxos_apply.ops.replica_step` over the
+  :class:`~.bridge.KVBridge` planes (one lane per key), replies coming back
+  as :class:`~repro.core.vector.ReplyBatch` lanes;
+* every steered **reply** is folded and arbitrated by the issuer engine —
+  :func:`repro.core.proposer_vector.proposer_step` over the ProposerTable
+  planes (one lane per session), decisions coming back as
+  :class:`~repro.core.proposer_vector.ActionBatch` lanes.
+
+Host decisions (KV-coupled: grabbing the pair, accept-value computation,
+local commits, back-off/retry/inspection timers, FIFO probing) reuse the
+scalar machine's code verbatim, resolved through the bridge: they check out
+scalar ``KVPair`` views of single lanes and the bridge scatters the
+mutations back before the next engine step.  See the package docstring
+(:mod:`repro.serve.paxos`) for the full tick anatomy and the equivalence
+argument.
+
+The ingest side uses :class:`~.scheduler.IngestScheduler` in strict-order
+mode, so the batched cluster is completion-for-completion identical to the
+scalar cluster on any seeded schedule — the differential acceptance bar
+this subsystem is tested against (``tests/test_serve_paxos.py``,
+``scripts/batched_smoke.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import proposer_vector
+from repro.core.handlers import get_kv
+from repro.core.lanes import _COMMIT_KINDS
+from repro.core.node import Machine, ProtocolConfig, ReqKind
+from repro.core.proposer import (
+    ABD_PAUSED, AbdPhase, AbdRound, Decision, Phase, RmwRound,
+)
+from repro.core.types import (
+    Carstamp, HelpFlag, Msg, Reply, RmwId, TS, Tally,
+)
+from repro.core.vector import MsgBatch, ReplyBatch
+from repro.kernels.paxos_apply import ops
+
+from . import bridge
+from .scheduler import IngestScheduler
+
+
+class BatchedMachine(Machine):
+    """One simulated server, stepping as two SIMD calls per tick."""
+
+    # round events feed the live issuer lanes, trace tap or not
+    _wants_round_events = True
+
+    def __init__(self, mid: int, cfg: ProtocolConfig, send, now,
+                 incarnation: int = 0, *, use_kernel: bool = False,
+                 interpret: bool = True, block_rows: int = 32,
+                 batch_target: Optional[int] = None):
+        super().__init__(mid, cfg, send, now, incarnation)
+        # authoritative receiver state = engine planes behind the bridge
+        self.kvs = bridge.KVBridge()
+        # authoritative issuer state = ProposerTable planes (numpy, host
+        # mutable for round loads; jnp at engine boundaries)
+        self.lanes: Dict[str, np.ndarray] = {
+            f: np.full((cfg.sessions_per_machine,), v, np.int32)
+            for f, v in proposer_vector.TABLE_DEFAULTS.items()}
+        self.steering = bridge.SteeringTable(cfg.sessions_per_machine)
+        # message ingest: strict order keeps the batched execution
+        # oracle-exact (see scheduler docstring); one persistent instance
+        # per machine so its stats survive as serve-path observability
+        self.ingest = IngestScheduler(strict_order=True,
+                                      batch_target=batch_target)
+        # local synthetic replies (§4.6 implicit acks, §5/§8.4 self-notes)
+        # queued for the next issuer step — always the first fold of a fresh
+        # round, so with majority >= 2 they can never decide alone
+        self._notes: Deque[Tuple[int, Reply]] = deque()
+        self.use_kernel = use_kernel
+        self.interpret = interpret
+        self.block_rows = block_rows
+        self.batch_target = batch_target
+        self._commit_need = (cfg.majority - 1
+                             if cfg.commit_ack_quorum_is_majority else 1)
+        self.engine_stats = {"receiver_batches": 0, "receiver_lanes": 0,
+                             "issuer_batches": 0, "issuer_lanes": 0}
+
+    # =================================================================
+    # worker loop: batched inbox processing
+    # =================================================================
+
+    def step(self) -> None:
+        if not self.alive:
+            return
+        out_replies: List[Tuple[int, Reply]] = []
+        # Process the inbox as alternating message/reply runs: messages and
+        # replies cross-couple only through the KV store + registry (a
+        # commit changes what a decision's host action sees and vice versa),
+        # so a run boundary is a flush boundary — within a run, batching is
+        # free under the conflict rules.
+        run_msgs: List[Msg] = []
+        run_reps: List[Reply] = []
+        while self.inbox:
+            payload = self.inbox.popleft()
+            if isinstance(payload, Msg):
+                if run_reps:
+                    self._issuer_flush(run_reps)
+                    run_reps = []
+                run_msgs.append(payload)
+            else:
+                if run_msgs:
+                    self._receiver_flush(run_msgs, out_replies)
+                    run_msgs = []
+                run_reps.append(payload)
+        if run_reps:
+            self._issuer_flush(run_reps)
+        if run_msgs:
+            self._receiver_flush(run_msgs, out_replies)
+        # receiver replies go out after the whole inbox, in arrival order —
+        # same send sequence as the scalar worker loop (§3.1.3 step 3)
+        for dst, rep in out_replies:
+            self._send(self.mid, dst, rep)
+        for le in self.entries:
+            if le.active():
+                self._inspect(le)
+        for ab in self.abd:
+            if ab.phase != AbdPhase.IDLE:
+                self._inspect_abd(ab)
+        for sess in range(self.cfg.sessions_per_machine):
+            if self.session_idle(sess) and self.fifos[sess]:
+                self._start(sess, self.fifos[sess].popleft())
+        if self._notes:
+            # fold round-start self-notes from inspection/probe now, so the
+            # tally state entering the next tick matches the scalar machine
+            self._issuer_flush([])
+
+    # =================================================================
+    # receiver half: one vector step per conflict-free batch
+    # =================================================================
+
+    def _receiver_flush(self, run: List[Msg],
+                        out: List[Tuple[int, Reply]]) -> None:
+        for msg in run:
+            self.last_heard[msg.src] = self._now()
+            self.bump(f"recv_{msg.kind.name.lower()}")
+            if self.msg_trace is not None:
+                self.msg_trace.append(dataclasses.replace(msg))
+            self.kvs.ensure(msg.key)
+            self.ingest.offer(msg)
+        for batch in self.ingest.drain():
+            self._receiver_batch(batch, out)
+
+    def _receiver_batch(self, batch: List[Msg],
+                        out: List[Tuple[int, Reply]]) -> None:
+        n = self.kvs.n_keys
+        planes = {f: np.zeros((n,), np.int32) for f in MsgBatch._fields}
+        planes["has_value"][:] = 1                 # matches MsgBatch.noop
+        for msg in batch:
+            for f, v in bridge.msg_to_lanes(msg).items():
+                planes[f][msg.key] = v
+        msgb = MsgBatch(*[jnp.asarray(planes[f]) for f in MsgBatch._fields])
+        table, replies, registered = ops.replica_step(
+            self.kvs.to_table(), msgb,
+            bridge.KVBridge.registry_lanes(self.registry),
+            block_rows=self.block_rows, interpret=self.interpret,
+            use_kernel=self.use_kernel)
+        self.kvs.absorb(table)
+        bridge.KVBridge.absorb_registry(self.registry, registered)
+        rep_np = {f: np.asarray(p)
+                  for f, p in zip(ReplyBatch._fields, replies)}
+        for msg in batch:
+            rep = bridge.reply_from_lanes(rep_np, msg, src=self.mid)
+            if msg.kind in _COMMIT_KINDS:
+                self._record_commit(msg.key, msg.log_no, msg.rmw_id,
+                                    msg.value, msg.base_ts,
+                                    get_kv(self.kvs, msg.key),
+                                    val_log=msg.val_log)
+            self.bump(f"rep_{rep.opcode.name.lower()}")
+            out.append((msg.src, rep))
+        self.engine_stats["receiver_batches"] += 1
+        self.engine_stats["receiver_lanes"] += len(batch)
+
+    # =================================================================
+    # issuer half: one proposer step per conflict-free reply batch
+    # =================================================================
+
+    def _issuer_flush(self, run: List[Reply]) -> None:
+        for rep in run:
+            self.last_heard[rep.src] = self._now()
+        stream = deque(run)
+        while stream or self._notes:
+            batch: List[Tuple[int, Reply]] = []
+            lanes_in = set()
+            is_notes = bool(self._notes)
+            if is_notes:
+                # queued self-notes are older than any still-unfolded
+                # network reply of this run (they were created by an
+                # earlier dispatch/round start) — fold them first
+                while self._notes and self._notes[0][0] not in lanes_in:
+                    lane, rep = self._notes.popleft()
+                    batch.append((lane, rep))
+                    lanes_in.add(lane)
+            else:
+                while stream:
+                    rep = stream[0]
+                    lane = self.steering.lane_of(rep.lid)
+                    if lane is None:           # unroutable lid: drop, like
+                        stream.popleft()       # the scalar sess-range check
+                        continue
+                    if lane in lanes_in:
+                        break                  # per-session order barrier
+                    stream.popleft()
+                    batch.append((lane, rep))
+                    lanes_in.add(lane)
+            if batch:
+                # notes were already traced at _note_local time (mirroring
+                # the scalar machine, which traces before folding)
+                self._issuer_batch(batch, trace_replies=not is_notes)
+
+    def _issuer_batch(self, batch: List[Tuple[int, Reply]],
+                      trace_replies: bool = True) -> None:
+        n_sess = self.cfg.sessions_per_machine
+        repb = {f: np.zeros((n_sess,), np.int32)
+                for f in proposer_vector.IssuerReplyBatch._fields}
+        repb["kind"] -= 1                          # idle lanes
+        for lane, rep in batch:
+            for f, v in bridge.reply_to_lanes(rep).items():
+                repb[f][lane] = v
+        table = proposer_vector.ProposerTable(
+            *[jnp.asarray(self.lanes[f])
+              for f in proposer_vector.ProposerTable._fields])
+        batchv = proposer_vector.IssuerReplyBatch(
+            *[jnp.asarray(repb[f])
+              for f in proposer_vector.IssuerReplyBatch._fields])
+        table, actions = proposer_vector.proposer_step(
+            table, batchv, n_machines=self.cfg.n_machines,
+            majority=self.cfg.majority, commit_need=self._commit_need,
+            log_too_high_threshold=self.cfg.log_too_high_threshold)
+        for f, plane in zip(proposer_vector.ProposerTable._fields, table):
+            self.lanes[f] = np.array(plane, np.int32)
+        act = {f: np.asarray(p)
+               for f, p in zip(proposer_vector.ActionBatch._fields, actions)}
+        self.engine_stats["issuer_batches"] += 1
+        self.engine_stats["issuer_lanes"] += len(batch)
+        # Trace + dispatch per lane, in arrival order.  The reply trace and
+        # its decision trace must stay adjacent (reply, then decision) —
+        # the replay harness relies on every decision being recorded before
+        # any later reply that could flush it, exactly as the scalar
+        # machine (which decides inline) naturally orders them.  Decisions
+        # themselves are pure per-lane — the engine already computed them —
+        # but their host actions touch the shared KV store, so dispatch
+        # order must match scalar arrival order too.
+        for lane, rep in batch:
+            if trace_replies:
+                self._trace_reply(lane, rep)
+            d = Decision(int(act["decision"][lane]))
+            if d != Decision.WAIT:
+                self._dispatch_decision(lane, d, act)
+
+    # -- decision dispatch: ActionBatch lane -> scalar host action ----------
+
+    def _dispatch_decision(self, sess: int, d: Decision,
+                           act: Dict[str, np.ndarray]) -> None:
+        le = self.entries[sess]
+        ab = self.abd[sess]
+        payload = bridge.action_payload(act, sess, d)
+        if d in (Decision.LEARNED, Decision.LEARNED_NO_BCAST):
+            self._trace_decision(sess, d)
+            self._on_learned_committed(
+                le, no_bcast=d == Decision.LEARNED_NO_BCAST)
+        elif d == Decision.LOG_TOO_LOW:
+            self._trace_decision(sess, d, payload)
+            self._apply_log_too_low(le, bridge.log_too_low_reply(act, sess))
+        elif d == Decision.RETRY:
+            self._trace_decision(sess, d, payload)
+            if int(act["sh_has"][sess]):
+                le.retry_version = max(le.retry_version,
+                                       int(act["ts_v"][sess]) + 1)
+            if le.all_aboard:
+                self.bump("all_aboard_fallbacks")
+            self._enter_retry(le)
+        elif d == Decision.LOCAL_ACCEPT:
+            self._trace_decision(sess, d)
+            self._load_fresh_tally(le, sess)
+            self._local_accept_own(le)
+        elif d in (Decision.HELP, Decision.HELP_SELF):
+            self._trace_decision(sess, d, payload)
+            self._begin_help(le, bridge.lower_acc_reply(act, sess))
+        elif d == Decision.RECOMMIT:
+            self._trace_decision(sess, d)
+            self._apply_recommit(le)
+        elif d == Decision.RETRY_LOG_TOO_HIGH:
+            self._trace_decision(sess, d)
+            le.log_too_high_counter += 1
+            self._enter_retry(le)
+        elif d == Decision.COMMIT_BCAST:
+            le.all_acked = int(act["has_value"][sess]) == 0  # §8.6 thin
+            self._trace_decision(sess, d, payload)
+            self._apply_commit_bcast(
+                le, helping=le.helping_flag == HelpFlag.HELPING)
+        elif d == Decision.STOP_HELP:
+            self._trace_decision(sess, d)
+            self._stop_helping(le)
+        elif d == Decision.COMMIT_DONE:
+            self._finish_commit(le)
+        elif d == Decision.ABD_W2:
+            self._trace_decision(sess, d, payload)
+            ab.max_base = TS(int(act["base_v"][sess]),
+                             int(act["base_m"][sess]))
+            self._write_phase2(ab)
+        elif d == Decision.ABD_W_DONE:
+            self._trace_decision(sess, d)
+            self._complete_abd(ab, ReqKind.WRITE, ab.value,
+                               Carstamp(ab.max_base, 0))
+        elif d == Decision.ABD_R_DONE:
+            self._trace_decision(sess, d)
+            self._load_best(ab, sess)
+            self._complete_abd(ab, ReqKind.READ, ab.best_value, ab.best_cs)
+        elif d == Decision.ABD_R_WB:
+            self._trace_decision(sess, d, payload)
+            ab.best_log_no = int(act["log_no"][sess])
+            ab.best_rmw_id = RmwId(int(act["rmw_cnt"][sess]),
+                                   int(act["rmw_sess"][sess]))
+            ab.best_value = int(act["value"][sess])
+            ab.best_cs = Carstamp(TS(int(act["base_v"][sess]),
+                                     int(act["base_m"][sess])),
+                                  int(act["val_log"][sess]))
+            self._read_write_back(ab)
+        elif d == Decision.ABD_RC_DONE:
+            self._trace_decision(sess, d)
+            self._complete_abd(ab, ReqKind.READ, ab.best_value, ab.best_cs)
+        else:                                       # pragma: no cover
+            raise AssertionError(f"engine emitted unknown decision {d!r}")
+
+    def _load_fresh_tally(self, le, sess: int) -> None:
+        """§10.3: LOCAL_ACCEPT's accept-value computation needs the
+        freshest Ack-base-TS-stale payload — it lives in the fr_* planes."""
+        t = Tally()
+        if int(self.lanes["fr_has"][sess]):
+            t.fresh_value = int(self.lanes["fr_val"][sess])
+            t.fresh_cs = Carstamp(TS(int(self.lanes["fr_base_v"][sess]),
+                                     int(self.lanes["fr_base_m"][sess])),
+                                  int(self.lanes["fr_log"][sess]))
+        le.tally = t
+
+    def _load_best(self, ab, sess: int) -> None:
+        """§11: ABD_R_DONE completes with the best-carstamp fold state."""
+        ab.best_value = int(self.lanes["best_val"][sess])
+        ab.best_cs = Carstamp(TS(int(self.lanes["best_base_v"][sess]),
+                                 int(self.lanes["best_base_m"][sess])),
+                              int(self.lanes["best_vlog"][sess]))
+        ab.best_log_no = int(self.lanes["best_log"][sess])
+        ab.best_rmw_id = RmwId(int(self.lanes["best_cnt"][sess]),
+                               int(self.lanes["best_sess"][sess]))
+
+    # =================================================================
+    # issuer-lane maintenance hooks (round loads, pauses, local notes)
+    # =================================================================
+
+    def _note_rmw_round(self, ev: RmwRound) -> None:
+        super()._note_rmw_round(ev)
+        bridge.load_rmw_round(self.lanes, ev)
+        self.steering.register(ev.sess, ev.lid)
+
+    def _note_abd_round(self, ev: AbdRound) -> None:
+        super()._note_abd_round(ev)
+        bridge.load_abd_round(self.lanes, ev)
+        self.steering.register(ev.sess, ev.lid, abd=True)
+
+    def _trace_pause(self, sess: int, abd: int = 0) -> None:
+        super()._trace_pause(sess, abd)
+        # host-initiated round abandonment (timeout retry, stop-helping):
+        # park the lane so stragglers for the dead round cannot decide
+        if abd:
+            self.lanes["abd_phase"][sess] = ABD_PAUSED
+        else:
+            self.lanes["phase"][sess] = int(Phase.PAUSED)
+
+    def _note_local(self, le, rep: Reply) -> None:
+        # scalar: trace + fold into le.tally.  Batched: trace now, fold via
+        # the engine at the next issuer flush (still before any network
+        # reply of the same round — those arrive a tick later at best).
+        self._trace_reply(le.sess, rep)
+        self._notes.append((le.sess, rep))
+
+    def crash(self) -> None:
+        super().crash()
+        self._notes.clear()

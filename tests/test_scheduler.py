@@ -1,0 +1,191 @@
+"""Ingest-scheduler invariants (repro.serve.paxos.scheduler).
+
+Deterministic unit tests for the engine contract (conflict-free batches,
+per-key FIFO, the registry rule, batch-size targets, strict-order
+equivalence with the replay bucketer), plus hypothesis property tests for
+the fairness claims: under adversarial key skew no admitted item starves
+(every emitted batch contains the globally oldest pending item), batches
+never contain a key conflict, and batch-size targets are respected.
+"""
+
+import pytest
+
+from repro.core.types import Msg, MsgKind, RmwId, TS
+from repro.serve.paxos.scheduler import IngestScheduler, bucket_conflict_free
+
+
+def msg(kind, key, cnt=0, gsess=-1, seq=0):
+    return Msg(kind, src=0, key=key, ts=TS(3, 0),
+               rmw_id=RmwId(cnt, gsess), lid=seq)
+
+
+def propose(key, cnt=1, gsess=0):
+    return msg(MsgKind.PROPOSE, key, cnt, gsess)
+
+
+def commit(key, cnt=1, gsess=0):
+    return msg(MsgKind.COMMIT, key, cnt, gsess)
+
+
+# ---------------------------------------------------------------------------
+# deterministic contract tests
+# ---------------------------------------------------------------------------
+
+def test_strict_drain_matches_bucket_conflict_free():
+    trace = [propose(0), propose(1), propose(0), commit(2, cnt=3, gsess=1),
+             propose(3, cnt=2, gsess=1), propose(3, cnt=9, gsess=1),
+             commit(0), propose(1, cnt=1, gsess=0)]
+    sched = IngestScheduler(strict_order=True)
+    for m in trace:
+        sched.offer(m)
+    assert list(sched.drain()) == bucket_conflict_free(trace)
+
+
+def test_registry_rule_splits_batch():
+    # a commit registering (3, gsess 1) must not share a batch with a later
+    # PROPOSE reading rmw-id (2, gsess 1): registered-ness would be stale
+    trace = [commit(0, cnt=3, gsess=1), propose(1, cnt=2, gsess=1)]
+    batches = bucket_conflict_free(trace)
+    assert [len(b) for b in batches] == [1, 1]
+    # a higher counter is not registered by it -> same batch is fine
+    trace2 = [commit(0, cnt=3, gsess=1), propose(1, cnt=4, gsess=1)]
+    assert len(bucket_conflict_free(trace2)) == 1
+
+
+def test_batch_target_caps_emission():
+    sched = IngestScheduler(batch_target=3, strict_order=True)
+    for key in range(10):
+        sched.offer(propose(key))
+    sizes = [len(b) for b in sched.drain()]
+    assert sizes == [3, 3, 3, 1]
+
+
+def test_aging_mode_lets_cold_keys_overtake():
+    # strict mode stalls behind the hot key; aging mode packs cold keys
+    # into the same batches
+    trace = [propose(0), propose(0), propose(0), propose(1), propose(2)]
+    strict = IngestScheduler(strict_order=True)
+    aging = IngestScheduler(strict_order=False)
+    for m in trace:
+        strict.offer(m)
+        aging.offer(m)
+    assert [len(b) for b in strict.drain()] == [1, 1, 3]
+    assert [len(b) for b in aging.drain()] == [3, 1, 1]
+
+
+def test_key_of_for_generic_items():
+    sched = IngestScheduler(key_of=lambda item: item[0])
+    sched.offer(("sess0", "a"))
+    sched.offer(("sess1", "b"))
+    sched.offer(("sess0", "c"))
+    batches = list(sched.drain())
+    assert batches == [[("sess0", "a"), ("sess1", "b")], [("sess0", "c")]]
+
+
+def test_non_msg_without_key_of_raises():
+    with pytest.raises(TypeError):
+        IngestScheduler().offer(("no", "lane"))
+
+
+# ---------------------------------------------------------------------------
+# hypothesis properties (the deterministic tests above run without it —
+# the guarded-import pattern keeps this module partially collectable)
+# ---------------------------------------------------------------------------
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAVE_HYPOTHESIS = True
+except ImportError:                                  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS,
+    reason="scheduler property tests need hypothesis (pip install -r "
+           "requirements-dev.txt)")
+
+if HAVE_HYPOTHESIS:
+    KINDS = [MsgKind.PROPOSE, MsgKind.ACCEPT, MsgKind.COMMIT,
+             MsgKind.READ_COMMIT, MsgKind.WRITE, MsgKind.READ_QUERY]
+
+    # adversarial key skew: key 0 is drawn an order of magnitude more often
+    skewed_key = st.one_of(st.just(0), st.just(0), st.just(0),
+                           st.integers(min_value=0, max_value=7))
+    msgs = st.lists(
+        st.builds(lambda kind, key, cnt, gsess: msg(kind, key, cnt, gsess),
+                  st.sampled_from(KINDS), skewed_key,
+                  st.integers(min_value=1, max_value=3),
+                  st.integers(min_value=-1, max_value=3)),
+        max_size=120)
+    targets = st.one_of(st.none(), st.integers(min_value=1, max_value=6))
+    modes = st.booleans()
+
+
+def _reg_would_see_stale(batch):
+    """True if any PROPOSE/ACCEPT shares a batch with an *earlier* commit
+    that registered its rmw-id (the in-batch visibility hazard)."""
+    reg = {}
+    for m in batch:
+        if (m.kind in (MsgKind.PROPOSE, MsgKind.ACCEPT)
+                and m.rmw_id.gsess >= 0
+                and reg.get(m.rmw_id.gsess, -1) >= m.rmw_id.counter):
+            return True
+        if (m.kind in (MsgKind.COMMIT, MsgKind.READ_COMMIT)
+                and m.rmw_id.gsess >= 0):
+            reg[m.rmw_id.gsess] = max(reg.get(m.rmw_id.gsess, -1),
+                                      m.rmw_id.counter)
+    return False
+
+
+if HAVE_HYPOTHESIS:
+    @needs_hypothesis
+    @settings(max_examples=120, deadline=None)
+    @given(trace=msgs, target=targets, strict=modes)
+    def test_batches_conflict_free_and_fifo(trace, target, strict):
+        sched = IngestScheduler(batch_target=target, strict_order=strict)
+        for m in trace:
+            sched.offer(m)
+        emitted = []
+        per_key_in = {}
+        for i, m in enumerate(trace):
+            per_key_in.setdefault(m.key, []).append(i)
+        order = {id(m): i for i, m in enumerate(trace)}
+        per_key_out = {}
+        for batch in sched.drain():
+            assert batch, "drain must never emit an empty batch"
+            if target is not None:
+                assert len(batch) <= target, "batch-size target violated"
+            keys = [m.key for m in batch]
+            assert len(keys) == len(set(keys)), "key conflict inside a batch"
+            assert not _reg_would_see_stale(batch), "registry rule violated"
+            for m in batch:
+                per_key_out.setdefault(m.key, []).append(order[id(m)])
+            emitted.extend(batch)
+        assert len(emitted) == len(trace), "scheduler lost/duplicated items"
+        for key, seq in per_key_out.items():
+            assert seq == per_key_in[key], f"per-key FIFO broken ({key})"
+
+    @needs_hypothesis
+    @settings(max_examples=120, deadline=None)
+    @given(trace=msgs, target=targets)
+    def test_no_starvation_under_key_skew(trace, target):
+        """Aging fairness: every emitted batch contains the globally oldest
+        pending item — a hot key can never starve a cold key's request."""
+        sched = IngestScheduler(batch_target=target, strict_order=False)
+        for m in trace:
+            sched.offer(m)
+        pending = list(trace)
+        for batch in sched.drain():
+            assert pending[0] in batch, "oldest pending item starved"
+            for m in batch:
+                pending.remove(m)
+        assert not pending
+
+    @needs_hypothesis
+    @settings(max_examples=60, deadline=None)
+    @given(trace=msgs)
+    def test_strict_mode_is_the_replay_bucketer(trace):
+        sched = IngestScheduler(strict_order=True)
+        for m in trace:
+            sched.offer(m)
+        assert list(sched.drain()) == bucket_conflict_free(trace)
