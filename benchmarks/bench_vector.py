@@ -44,7 +44,7 @@ import numpy as np
 
 from repro.core import proposer_vector, vector
 from repro.core.proposer import AbdPhase, Phase
-from repro.core.types import TS, Msg, MsgKind, RmwId
+from repro.core.types import TS, Msg, MsgKind, RmwId, View
 from repro.kernels.paxos_apply import ops
 
 N_GSESS = 40
@@ -233,8 +233,9 @@ def bench_issuer(n_lanes: int, iters: int = 30, n_machines: int = 5,
                  repeats: int = 3):
     """Replies/second through the batched proposer step (issuer half)."""
     table, batch = random_issuer_tables(n_lanes, n_machines=n_machines)
-    kw = dict(n_machines=n_machines, majority=n_machines // 2 + 1,
-              commit_need=n_machines // 2, log_too_high_threshold=4)
+    kw = dict(n_machines=n_machines, majority=View.quorum_of(n_machines),
+              commit_need=View.quorum_of(n_machines) - 1,
+              log_too_high_threshold=4)
     step = lambda t: proposer_vector.proposer_step(t, batch, **kw)[0]
     t0 = step(table)
     jax.block_until_ready(t0)
@@ -305,6 +306,66 @@ def bench_e2e(n_ops: int = 60, keys: int = 8, seed: int = 5,
     return rows
 
 
+def bench_reconfig(n_ops: int = 36, keys: int = 6, seed: int = 7,
+                   sessions: int = 4):
+    """Client ops/s during a live view change vs steady state.
+
+    Drives the same mixed workload through a ``reconfig=True`` cluster
+    twice — once quiescent-membership, once overlapping a join + leave
+    (3 -> 4 -> 3 machines) — on both the scalar and the batched serve
+    path, asserting completion-for-completion equality and green checkers
+    before reporting.  The interesting number is the ratio: how much a
+    view change (fencing, round restarts, snapshot catch-up) costs the
+    clients that keep running through it.
+    """
+    from repro.core import checkers
+    from repro.core.node import Machine, ProtocolConfig
+    from repro.core.sim import (
+        Cluster, NetConfig, completion_tuples, workload,
+    )
+    from repro.serve.paxos import BatchedMachine
+
+    rows, ref = [], None
+    for impl, mcls in (("scalar", Machine), ("batched", BatchedMachine)):
+        cl = Cluster(ProtocolConfig(n_machines=3,
+                                    sessions_per_machine=sessions,
+                                    reconfig=True),
+                     NetConfig(seed=seed), machine_cls=mcls)
+        # steady state: fixed membership
+        workload(cl, n_ops=n_ops, keys=keys, seed=seed, key_base=1,
+                 rmw_frac=0.5, write_frac=0.3)
+        t0 = time.time()
+        if not cl.run_until_quiet(max_ticks=200_000):
+            raise RuntimeError(f"reconfig {impl} steady phase stuck")
+        dt_steady = time.time() - t0
+        n_steady = len(cl.history)
+        # view change under load: join 3 then remove 1 mid-workload
+        workload(cl, n_ops=n_ops, keys=keys, seed=seed + 1, key_base=1,
+                 rmw_frac=0.5, write_frac=0.3)
+        t0 = time.time()
+        cl.join(3)
+        cl.leave(1)
+        if not cl.run_until_quiet(max_ticks=200_000):
+            raise RuntimeError(f"reconfig {impl} view-change phase stuck")
+        dt_change = time.time() - t0
+        checkers.check_all(cl)
+        comps = completion_tuples(cl)
+        if ref is None:
+            ref = comps
+        elif comps != ref:
+            raise RuntimeError("batched reconfig run diverged from scalar")
+        n_change = len(cl.history) - n_steady
+        steady = round(n_steady / dt_steady)
+        change = round(n_change / dt_change)
+        rows.append({
+            "impl": impl, "view_epoch": cl.active_view.epoch,
+            "completed_steady": n_steady, "completed_view_change": n_change,
+            "ops_per_s_steady": steady, "ops_per_s_view_change": change,
+            "view_change_slowdown": round(steady / max(change, 1), 2),
+        })
+    return rows
+
+
 def check_kernel_matches_oracle(n_keys: int = 256, seed: int = 5):
     """One mixed full-vocabulary batch: Pallas (interpret) == pure jnp."""
     kv, msg, reg = random_tables(n_keys, seed=seed)
@@ -329,6 +390,12 @@ def main(argv=None):
                         help="write results as JSON (default for --smoke: "
                              "BENCH_smoke.json, seeding the CI perf "
                              "trajectory artifact)")
+    parser.add_argument("--trajectory", default="benchmarks/BENCH_trajectory.jsonl",
+                        metavar="PATH",
+                        help="append the smoke lanes as one JSONL record to "
+                             "this *tracked* file (perf history survives in "
+                             "git, not just as an ephemeral CI artifact); "
+                             "pass '' to disable")
     args = parser.parse_args(argv)
 
     if args.smoke:
@@ -347,10 +414,16 @@ def main(argv=None):
                                                    use_kernel=True),
             "issuer": [bench_issuer(n, iters=10)],
             "e2e": bench_e2e(),
+            "reconfig": bench_reconfig(),
         }
         out = args.json or "BENCH_smoke.json"
         with open(out, "w") as fh:
             json.dump(rows, fh, indent=1)
+        if args.trajectory:
+            rec = dict(rows,
+                       when=time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()))
+            with open(args.trajectory, "a") as fh:
+                fh.write(json.dumps(rec, separators=(",", ":")) + "\n")
         print(json.dumps(rows, indent=1))
         print(f"smoke OK: kernel == oracle, op-class ordering holds "
               f"({out} written)")

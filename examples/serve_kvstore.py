@@ -4,6 +4,13 @@ The serving control plane is the paper's register: session->replica
 routes are CAS'd once and ABD-read per request; a router replica crash
 does not interrupt routing (no election).
 
+Live reconfiguration (``reconfig=True``): the registry's membership is
+itself a value in the register — a View in the reserved config key,
+changed by a normal CAS.  ``add_replica`` grows the fleet under load (the
+joiner catches up from a peer snapshot before it votes) and
+``remove_replica`` retires one — here the *crashed* replica, shrinking
+the quorum back to all-live machines without a maintenance window.
+
     PYTHONPATH=src python examples/serve_kvstore.py
 """
 
@@ -23,7 +30,7 @@ def main():
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))[0]
 
-    registry = PaxosRegistry(n_machines=5, all_aboard=True)
+    registry = PaxosRegistry(n_machines=5, all_aboard=True, reconfig=True)
     engines = [DecodeEngine(model, params, ServeConfig(max_seq=64),
                             registry, replica_id=r) for r in range(2)]
 
@@ -40,6 +47,21 @@ def main():
     registry.crash(2)
     assert engines[0].route(101) == routes[101]
     print("routing survives registry replica crash")
+
+    # live reconfiguration under load: grow the fleet by one replica (the
+    # joiner snapshots a peer and replays the committed tail before it
+    # votes), then retire the crashed replica from the membership — both
+    # are CASes on the config register through the normal consensus path
+    new_mid = registry.add_replica()
+    view = registry.cluster.active_view
+    print(f"replica {new_mid} joined live: view epoch {view.epoch}, "
+          f"members {view.members}")
+    assert engines[0].route(101) == routes[101]   # routing uninterrupted
+    registry.remove_replica(2)
+    view = registry.cluster.active_view
+    print(f"crashed replica retired: view epoch {view.epoch}, "
+          f"members {view.members}")
+    assert engines[1].route(102) == routes[102]
 
     # batched greedy generation
     rng = np.random.default_rng(0)

@@ -15,6 +15,11 @@ python benchmarks/bench_vector.py --smoke
 # completions identical to the scalar cluster + linearizability checkers
 # green (see scripts/batched_smoke.py)
 python scripts/batched_smoke.py
+# Reconfiguration smoke: >= 20 seeded join/leave/rejoin storms (crash +
+# partition overlapping the view changes) through the CP-decided config
+# register, scalar vs batched completion-identical, view-transition +
+# linearizability checkers green (see scripts/reconfig_smoke.py)
+python scripts/reconfig_smoke.py
 # Lint gate (mirrors CI's lint job); skipped when ruff isn't installed
 if command -v ruff >/dev/null 2>&1; then
   ruff check .

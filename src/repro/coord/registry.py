@@ -36,18 +36,22 @@ from repro.core.types import RmwOp
 class PaxosRegistry:
     def __init__(self, n_machines: int = 5, *, all_aboard: bool = True,
                  net: Optional[NetConfig] = None, sessions: int = 8,
-                 machine_cls: Optional[type] = None):
+                 machine_cls: Optional[type] = None,
+                 reconfig: bool = False):
         """``machine_cls`` selects the replica implementation — pass
         :class:`repro.serve.paxos.BatchedMachine` to serve every
-        coordination op through the batched two-engine path."""
+        coordination op through the batched two-engine path.
+        ``reconfig=True`` governs membership by the config-register view
+        (live :meth:`add_replica` / :meth:`remove_replica`)."""
         kw = {} if machine_cls is None else {"machine_cls": machine_cls}
         self.cluster = Cluster(
             ProtocolConfig(n_machines=n_machines,
                            sessions_per_machine=sessions,
-                           all_aboard=all_aboard),
+                           all_aboard=all_aboard, reconfig=reconfig),
             net or NetConfig(seed=0), **kw)
         self._rr = itertools.count()
         self._keys: Dict[str, int] = {}
+        # name -> key starts at 1: key 0 is the reserved config register
         self._next_key = itertools.count(1)
 
     # -- key namespace ---------------------------------------------------------
@@ -71,11 +75,14 @@ class PaxosRegistry:
 
     def _pick(self) -> Tuple[int, int]:
         cfg = self.cluster.cfg
-        for _ in range(cfg.n_machines):
+        members = self.cluster.active_view.members
+        for _ in range(len(members)):
             i = next(self._rr)
-            mid = i % cfg.n_machines
-            if self.cluster.machines[mid].alive:
-                sess = (i // cfg.n_machines) % cfg.sessions_per_machine
+            mid = members[i % len(members)]
+            m = (self.cluster.machines[mid]
+                 if mid < len(self.cluster.machines) else None)
+            if m is not None and m.alive and not m.retired and not m.syncing:
+                sess = (i // len(members)) % cfg.sessions_per_machine
                 return mid, sess
         raise RuntimeError("no live machines")
 
@@ -128,6 +135,18 @@ class PaxosRegistry:
 
     def restart(self, mid: int) -> None:
         self.cluster.restart(mid)
+
+    # -- live reconfiguration (requires reconfig=True) -----------------------
+
+    def add_replica(self, mid: Optional[int] = None) -> int:
+        """Grow the membership by one replica (CP-decided view change +
+        snapshot catch-up); returns the joined machine id."""
+        return self.cluster.join(mid)
+
+    def remove_replica(self, mid: int) -> None:
+        """Shrink the membership by one replica (the machine retires once
+        it installs the new view; traffic to it is fenced)."""
+        self.cluster.leave(mid)
 
     # -- coordination patterns -------------------------------------------------------------
 

@@ -246,10 +246,50 @@ def _check_realtime(seq: List[dict], key: int) -> None:
                 f"op was invoked at {a['invoke']}")
 
 
+def check_view_transitions(cluster: Cluster) -> None:
+    """Reconfiguration safety over the decided config-register history.
+
+    The config register's committed slots (plus ABD writes riding on its
+    value plane — there are none in practice, view changes are RMW-only)
+    are the total order of view changes.  Every consecutive value change
+    must decode to a view, bump the epoch by exactly one, and differ from
+    its predecessor by a single member — the transition rule quorum
+    intersection rests on (see :mod:`repro.reconfig.views`).
+    """
+    if not getattr(cluster.cfg, "reconfig", False):
+        return
+    from .types import CONFIG_KEY, View
+    decided = check_log_agreement(cluster)
+    slots = sorted(slot for (key, slot) in decided if key == CONFIG_KEY)
+    values = [decided[(CONFIG_KEY, s)][1] for s in slots]
+    prev = View.initial(cluster.cfg.n_machines)
+    last_raw = None
+    for raw in values:
+        if raw == last_raw:
+            continue                       # FETCH / lost-CAS slots: no-ops
+        last_raw = raw
+        view = View.decode(raw)
+        if view is None:
+            if raw == 0:
+                continue                   # initial unset value
+            raise SafetyViolation(f"undecodable view value {raw}")
+        if view.epoch != prev.epoch + 1:
+            raise SafetyViolation(
+                f"view epoch jumped {prev.epoch} -> {view.epoch} "
+                f"({prev.members} -> {view.members})")
+        delta = set(view.members) ^ set(prev.members)
+        if len(delta) != 1:
+            raise SafetyViolation(
+                f"view change {prev.members} -> {view.members} is not a "
+                f"single-member delta")
+        prev = view
+
+
 def check_all(cluster: Cluster) -> None:
     check_log_agreement(cluster)
     check_exactly_once(cluster)
     check_log_prefix(cluster)
     check_registry_monotone(cluster)
     check_completed_rmws_decided(cluster)
+    check_view_transitions(cluster)
     check_linearizable(cluster)

@@ -271,6 +271,12 @@ def apply_msg(kv: KVPair, msg: Msg, registry: Registry) -> Reply:
         return on_write(kv, msg)
     if msg.kind == MsgKind.READ_QUERY:
         return on_read_query(kv, msg)
+    if msg.kind in (MsgKind.VIEW, MsgKind.JOIN_REQ, MsgKind.SYNC):
+        # reconfiguration control plane: host-intercepted by Machine._admit
+        # (epoch fencing) before dispatch ever reaches the KV handlers or
+        # the receiver engine — reaching here is a routing bug.
+        raise ValueError(f"control-plane kind {msg.kind!r} must be admitted "
+                         f"by Machine._admit, not applied to a KVPair")
     raise ValueError(f"not a receiver-side message kind: {msg.kind!r}")
 
 

@@ -26,10 +26,15 @@ from .proposer import (
     ReplyEvent, RmwRound,
 )
 from .types import (
-    ALL_ABOARD_VERSION, Carstamp, FIRST_PROPOSE_VERSION, HelpFlag,
-    KVPair, KVState, LEState, LocalEntry, Msg, MsgKind, Rep, Reply,
-    RmwId, RmwOp, TS, TS_ZERO, apply_rmw,
+    ALL_ABOARD_VERSION, CONFIG_KEY, Carstamp, FIRST_PROPOSE_VERSION, HelpFlag,
+    KVPair, KVState, LEState, LocalEntry, MAX_MEMBERS, Msg, MsgKind, Rep,
+    Reply, RmwId, RmwOp, TS, TS_ZERO, View, apply_rmw,
 )
+
+# Restart-incarnation bound.  Both halves of the rmw-id namespace assume it:
+# counters carry `incarnation << 24` in their high bits (int32 engine lanes)
+# and the registry is striped per incarnation (`ProtocolConfig.num_gsess`).
+MAX_INCARNATIONS = 128
 
 
 @dataclasses.dataclass
@@ -45,14 +50,36 @@ class ProtocolConfig:
     all_aboard_timeout: int = 8          # §9.2 all-aboard-time-out-counter limit
     suspect_timeout: float = 50.0        # §9.2 note: skip all-aboard if a peer is quiet
     commit_ack_quorum_is_majority: bool = True   # §8.7 (one ack would also do)
+    # live reconfiguration: when True, membership is governed by the View in
+    # the config register (CONFIG_KEY) instead of n_machines, machines fence
+    # cross-epoch traffic, and global-session/bitmap capacity is provisioned
+    # for max_machines so members can join beyond the initial n_machines.
+    reconfig: bool = False
+    max_machines: int = MAX_MEMBERS
+
+    @property
+    def capacity(self) -> int:
+        """Machine-id capacity: how many mids state tables must cover."""
+        return self.max_machines if self.reconfig else self.n_machines
 
     @property
     def majority(self) -> int:
-        return self.n_machines // 2 + 1
+        return View.quorum_of(self.n_machines)
+
+    @property
+    def base_gsess(self) -> int:
+        """Global-session slots for one incarnation of the whole fleet."""
+        return self.capacity * self.sessions_per_machine
 
     @property
     def num_gsess(self) -> int:
-        return self.n_machines * self.sessions_per_machine
+        # One registry stripe per incarnation.  The registry is a pure
+        # high-water mark (committed[gsess] >= counter), so a single gsess
+        # must never span incarnations: the first commit of a restarted
+        # machine would otherwise vouch for the old incarnation's in-flight
+        # rmw-ids, leaving possibly-unchosen ACCEPTED entries that every
+        # helper abandons (RMW_ID_COMMITTED nack -> STOP_HELP livelock).
+        return MAX_INCARNATIONS * self.base_gsess
 
 
 # ---------------------------------------------------------------------------
@@ -94,16 +121,30 @@ class Completion:
 class Machine:
     def __init__(self, mid: int, cfg: ProtocolConfig,
                  send: Callable[[int, int, object], None],
-                 now: Callable[[], float], incarnation: int = 0):
+                 now: Callable[[], float], incarnation: int = 0,
+                 view: Optional[View] = None):
+        if not 0 <= mid < cfg.capacity:
+            raise ValueError(f"mid {mid} outside capacity {cfg.capacity}")
         self.mid = mid
         self.cfg = cfg
         self.incarnation = incarnation
         self._send = send                # (src, dst, payload) -> network
         self._now = now
+        # the active membership view; all quorum arithmetic reads from it
+        # (with reconfig off it is just the constant initial view)
+        self.view = view if view is not None else View.initial(cfg.n_machines)
+        self.syncing = False             # joiner waiting for a SYNC snapshot
+        self.retired = False             # removed from the active view
+        self._join_timer = 0
+        self._join_rr = 0
         self.kvs: Dict[int, KVPair] = {}
         self.registry = Registry(cfg.num_gsess)
+        # Each incarnation issues under its own gsess stripe: the registry
+        # high-water of a previous life must never vouch for this one's
+        # counters, nor vice versa (see ProtocolConfig.num_gsess).
         self.entries: List[LocalEntry] = [
-            LocalEntry(sess=s, gsess=mid * cfg.sessions_per_machine + s)
+            LocalEntry(sess=s, gsess=(incarnation * cfg.base_gsess
+                                      + mid * cfg.sessions_per_machine + s))
             for s in range(cfg.sessions_per_machine)
         ]
         self.abd: List[AbdEntry] = [AbdEntry(sess=s)
@@ -115,17 +156,18 @@ class Machine:
         # lanes of both SIMD engines (KVTable/ProposerTable planes), so a
         # 1<<32 incarnation stride would silently wrap there.  Fail loudly
         # at the boundary instead: 128 << 24 is the first overflow.
-        if not 0 <= incarnation < 128:
+        if not 0 <= incarnation < MAX_INCARNATIONS:
             raise ValueError(
-                f"incarnation {incarnation} out of range [0, 128): the "
-                f"1<<24 rmw-id stride would overflow the engines' int32 "
-                f"lanes — rejoin as a new member instead")
+                f"incarnation {incarnation} out of range "
+                f"[0, {MAX_INCARNATIONS}): the 1<<24 rmw-id stride would "
+                f"overflow the engines' int32 lanes — rejoin as a new "
+                f"member instead")
         self.rmw_counters = [incarnation << 24] * cfg.sessions_per_machine
         self.inbox: Deque[object] = deque()
         self.fifos: List[Deque[Request]] = [deque() for _ in
                                             range(cfg.sessions_per_machine)]
         self.completions: List[Tuple[int, Completion]] = []   # (sess, completion)
-        self.last_heard = [now()] * cfg.n_machines
+        self.last_heard = [now()] * cfg.capacity
         self.alive = True
         self._lid_counter = 1
         # Per-machine monotonic Lamport clock for ABD write base-TSes: keeps
@@ -172,10 +214,13 @@ class Machine:
         return (self._lid_counter << 16) | (sess & 0xFFFF)
 
     def _broadcast(self, msg: Msg) -> None:
-        for dst in range(self.cfg.n_machines):
+        msg.epoch = self.view.epoch
+        sent = 0
+        for dst in self.view.members:
             if dst != self.mid:
                 self._send(self.mid, dst, dataclasses.replace(msg))
-        self.bump(f"sent_{msg.kind.name.lower()}", self.cfg.n_machines - 1)
+                sent += 1
+        self.bump(f"sent_{msg.kind.name.lower()}", sent)
 
     def submit(self, sess: int, req: Request) -> None:
         self.fifos[sess].append(req)
@@ -189,13 +234,27 @@ class Machine:
     def step(self) -> None:
         if not self.alive:
             return
+        if self.retired:
+            # removed from the view: consume (and ignore) leftover traffic
+            self.inbox.clear()
+            return
+        if self.syncing:
+            # a joiner only speaks the catch-up plane until its SYNC lands
+            while self.inbox:
+                self._admit(self.inbox.popleft())
+            if self.syncing:
+                self._drive_catchup()
+            return
         out_replies: List[Tuple[int, Reply]] = []
         while self.inbox:
             payload = self.inbox.popleft()
+            if self._admit(payload):
+                continue
             if isinstance(payload, Msg):
                 rep = self._handle_msg(payload)
                 if rep is not None:
                     rep.src = self.mid
+                    rep.epoch = self.view.epoch
                     out_replies.append((payload.src, rep))
             else:
                 self._handle_reply(payload)
@@ -210,6 +269,7 @@ class Machine:
         for sess in range(self.cfg.sessions_per_machine):
             if self.session_idle(sess) and self.fifos[sess]:
                 self._start(sess, self.fifos[sess].popleft())
+        self._poll_config_register()
 
     def deliver(self, payload: object) -> None:
         if self.alive:
@@ -218,6 +278,198 @@ class Machine:
     def crash(self) -> None:
         self.alive = False
         self.inbox.clear()
+
+    # -- live reconfiguration: epoch fencing + view install --------------------
+    #
+    # (see the epoch-fencing rule next to the wire-kind definitions in
+    # repro.core.types)
+
+    def _admit(self, payload) -> bool:
+        """Epoch fence + control-plane dispatch.  True = consumed/dropped
+        here; False = a current-view protocol payload for the handlers."""
+        if not self.cfg.reconfig:
+            return False
+        if isinstance(payload, Msg):
+            kind = payload.kind
+            if kind == MsgKind.VIEW:
+                if not self.retired:
+                    v = View.decode(payload.value)
+                    if v is not None:
+                        self._install_view(v)
+                return True
+            if kind == MsgKind.SYNC:
+                if not self.retired:
+                    self._install_sync(payload)
+                return True
+            if kind == MsgKind.JOIN_REQ:
+                if (not self.retired and not self.syncing
+                        and payload.epoch <= self.view.epoch):
+                    self._serve_sync(payload.src)
+                else:
+                    self.bump("join_req_deferred")
+                return True
+        if self.retired or self.syncing:
+            self.bump("fenced_parked")
+            return True
+        if payload.epoch != self.view.epoch:
+            if payload.epoch < self.view.epoch:
+                self.bump("fenced_stale")
+                if isinstance(payload, Msg):
+                    # teach the laggard the committed view
+                    self._send(self.mid, payload.src, self._view_notice())
+            else:
+                self.bump("fenced_ahead")
+            return True
+        return False
+
+    def _view_notice(self) -> Msg:
+        return Msg(MsgKind.VIEW, self.mid, value=self.view.encode(),
+                   epoch=self.view.epoch)
+
+    def _poll_config_register(self) -> None:
+        """End-of-tick view poll: a commit to the config register that
+        landed this tick (receiver or issuer side) takes effect here."""
+        if not self.cfg.reconfig:
+            return
+        kv = self.kvs.get(CONFIG_KEY)
+        if kv is None:
+            return
+        v = View.decode(kv.value)
+        if v is not None:
+            self._install_view(v)
+
+    def _install_view(self, view: View) -> bool:
+        """Adopt a committed view: fence the old epoch, restart every
+        in-flight round so no quorum mixes replies across views, and
+        announce the view to old+new members (once per epoch)."""
+        if view.epoch <= self.view.epoch:
+            return False
+        old = self.view
+        self.view = view
+        self.bump("view_installs")
+        if self.mid not in view.members:
+            self._retire()
+        elif not self.syncing:
+            self._restart_rounds()
+        notice = self._view_notice()
+        for dst in sorted(set(old.members) | set(view.members)):
+            if dst != self.mid:
+                self._send(self.mid, dst, dataclasses.replace(notice))
+        return True
+
+    def _retire(self) -> None:
+        """We were removed from the view: park every session and go quiet.
+        In-flight client ops on this machine never complete (their clients
+        would re-submit to a member)."""
+        self.retired = True
+        self.bump("view_retired")
+        for le in self.entries:
+            if le.active():
+                self._trace_pause(le.sess)
+                self.entries[le.sess] = LocalEntry(sess=le.sess,
+                                                   gsess=le.gsess)
+        for ab in self.abd:
+            if ab.phase != AbdPhase.IDLE:
+                self._trace_pause(ab.sess, abd=1)
+                ab.phase = AbdPhase.IDLE
+        for fifo in self.fifos:
+            fifo.clear()
+        self.inbox.clear()
+
+    def _restart_rounds(self) -> None:
+        """Quorum sizes and tallies are per-view: every round gathering
+        replies restarts under the new view.  Decided state (accepted
+        values, chosen base-TSes, commit payloads) is preserved — only the
+        reply bookkeeping is discarded, which is always safe."""
+        for le in self.entries:
+            if le.state in (LEState.PROPOSED, LEState.ACCEPTED):
+                if le.helping_flag == HelpFlag.HELPING:
+                    self._stop_helping(le)
+                else:
+                    self._enter_retry(le)
+            elif le.state == LEState.COMMITTED:
+                # the value is decided; re-broadcast the commit so its ack
+                # quorum is counted against the new members
+                self._bcast_commits(le, from_help=le.commit_from_help)
+        for ab in self.abd:
+            self._restart_abd(ab)
+
+    def _restart_abd(self, ab: AbdEntry) -> None:
+        """Restart an in-flight ABD round for a new view.  Query phases may
+        restart from scratch (nothing installed yet); phase-2 rounds keep
+        their chosen base-TS / best carstamp (see ``_inspect_abd``: a write
+        must never re-query after installs were issued) and only reset the
+        ack tally under a fresh lid."""
+        if ab.phase == AbdPhase.IDLE:
+            return
+        if ab.phase == AbdPhase.W_QUERY:
+            self._trace_pause(ab.sess, abd=1)
+            self._start_write(ab.sess, Request(ReqKind.WRITE, ab.key,
+                                               value=ab.value, tag=ab.tag))
+        elif ab.phase == AbdPhase.R_QUERY:
+            self._trace_pause(ab.sess, abd=1)
+            self._start_read(ab.sess, Request(ReqKind.READ, ab.key,
+                                              tag=ab.tag))
+        elif ab.phase == AbdPhase.W_WRITE:
+            ab.ackers = set()
+            ab.lid = self._new_lid(ab.sess)
+            ab.round_age = 0
+            self._trace_abd_round(ab)
+            self._broadcast(Msg(MsgKind.WRITE, self.mid, key=ab.key,
+                                value=ab.value, base_ts=ab.max_base,
+                                lid=ab.lid))
+        elif ab.phase == AbdPhase.R_COMMIT:
+            ab.ackers = set()
+            ab.lid = self._new_lid(ab.sess)
+            ab.round_age = 0
+            self._trace_abd_round(ab)
+            self._broadcast(Msg(MsgKind.READ_COMMIT, self.mid, key=ab.key,
+                                log_no=ab.best_log_no, rmw_id=ab.best_rmw_id,
+                                value=ab.best_value, base_ts=ab.best_cs.base,
+                                val_log=ab.best_cs.log_no, lid=ab.lid))
+
+    # -- joiner catch-up (snapshot + replay; repro.reconfig.catchup) -----------
+
+    def begin_catchup(self) -> None:
+        """Enter the syncing state: speak only the catch-up plane until a
+        member's SYNC snapshot is installed."""
+        self.syncing = True
+        self._join_timer = 0
+        self._join_rr = 0
+
+    def _drive_catchup(self) -> None:
+        if self._join_timer <= 0:
+            donors = [m for m in self.view.members if m != self.mid]
+            if donors:
+                dst = donors[self._join_rr % len(donors)]
+                self._join_rr += 1
+                self.bump("join_reqs_sent")
+                self._send(self.mid, dst,
+                           Msg(MsgKind.JOIN_REQ, self.mid,
+                               epoch=self.view.epoch))
+            self._join_timer = self.cfg.retransmit_threshold
+        else:
+            self._join_timer -= 1
+
+    def _serve_sync(self, dst: int) -> None:
+        """Answer a JOIN_REQ with a snapshot of our committed state."""
+        from repro.reconfig.catchup import take_snapshot
+        self.bump("syncs_served")
+        self._send(self.mid, dst,
+                   Msg(MsgKind.SYNC, self.mid, value=self.view.encode(),
+                       epoch=self.view.epoch, blob=take_snapshot(self)))
+
+    def _install_sync(self, msg: Msg) -> None:
+        if not self.syncing:
+            self.bump("sync_duplicate")
+            return
+        from repro.reconfig.catchup import install_snapshot
+        install_snapshot(self, msg.blob)
+        self.syncing = False
+        self.bump("sync_installed")
+        v = View.decode(msg.value)
+        if v is not None:
+            self._install_view(v)    # donor may be ahead of the view we joined
 
     # -- receiver side ---------------------------------------------------------
 
@@ -396,8 +648,8 @@ class Machine:
     def _all_responsive(self) -> bool:
         """§9.2 final note: skip All-aboard if any peer has been quiet."""
         now = self._now()
-        return all(now - t <= self.cfg.suspect_timeout
-                   for m, t in enumerate(self.last_heard) if m != self.mid)
+        return all(now - self.last_heard[m] <= self.cfg.suspect_timeout
+                   for m in self.view.members if m != self.mid)
 
     def _note_local(self, le: LocalEntry, rep: Reply) -> None:
         """A synthetic local reply (§4.6 implicit ack, §5/§8.4 self-notes):
@@ -437,7 +689,7 @@ class Machine:
         le.lid = self._new_lid(le.sess)
         le.round_age = 0
         le.all_aboard = False
-        le.tally.reset(le.lid, self.cfg.n_machines)
+        le.tally.reset(le.lid, self.view.n)
         kv = get_kv(self.kvs, le.key)
         self._trace_rmw_round(le, Phase.PROPOSED, ts=le.ts, log_no=le.log_no,
                               rmw_id=le.rmw_id, value=0, base_ts=kv.base_ts,
@@ -552,7 +804,7 @@ class Machine:
         le.lid = self._new_lid(le.sess)
         le.round_age = 0
         le.all_aboard = aboard
-        le.tally.reset(le.lid, self.cfg.n_machines)
+        le.tally.reset(le.lid, self.view.n)
         self._trace_rmw_round(le, Phase.ACCEPTED, ts=le.ts, log_no=le.log_no,
                               rmw_id=rmw_id, value=value, base_ts=base_ts,
                               val_log=le.log_no, aboard=aboard,
@@ -574,7 +826,7 @@ class Machine:
     def _check_propose_replies(self, le: LocalEntry) -> None:
         t = le.tally
         d, payload = proposer.decide_propose(
-            t, majority=self.cfg.majority, own_rmw_id=le.rmw_id,
+            t, majority=self.view.quorum(), own_rmw_id=le.rmw_id,
             log_too_high_counter=le.log_too_high_counter,
             log_too_high_threshold=self.cfg.log_too_high_threshold)
         if d == Decision.WAIT:
@@ -674,8 +926,9 @@ class Machine:
         t = le.tally
         helping = le.helping_flag == HelpFlag.HELPING
         d, payload = proposer.decide_accept(
-            t, n_machines=self.cfg.n_machines, majority=self.cfg.majority,
-            helping=helping, all_aboard=le.all_aboard)
+            t, n_machines=self.view.all_aboard_quorum(),
+            majority=self.view.quorum(), helping=helping,
+            all_aboard=le.all_aboard)
         if d == Decision.WAIT:
             # majority replied, only acks but below the required quorum
             # (all-aboard waiting for everyone): handled by inspection
@@ -693,7 +946,7 @@ class Machine:
             self._trace_decision(le.sess, d, self._ltl_payload(payload))
             self._apply_log_too_low(le, payload)
         elif d == Decision.COMMIT_BCAST:
-            le.all_acked = t.acks >= self.cfg.n_machines
+            le.all_acked = t.acks >= self.view.all_aboard_quorum()
             self._trace_decision(le.sess, d, self._commit_bcast_payload(
                 le, helping, le.all_acked))
             self._apply_commit_bcast(le, helping)
@@ -848,7 +1101,7 @@ class Machine:
         le.commit_from_help = from_help
         le.lid = self._new_lid(le.sess)
         le.round_age = 0
-        le.tally.reset(le.lid, self.cfg.n_machines - 1)
+        le.tally.reset(le.lid, self.view.n - 1)
         self._trace_rmw_round(le, Phase.COMMITTED, ts=TS_ZERO, log_no=log_no,
                               rmw_id=rmw_id, value=wire_value,
                               base_ts=base_ts, val_log=val_log)
@@ -861,7 +1114,7 @@ class Machine:
     def _check_commit_acks(self, le: LocalEntry) -> None:
         # §8.7: apply the commit locally only after (a majority of) acks.
         d = proposer.decide_commit(
-            le.tally, majority=self.cfg.majority,
+            le.tally, majority=self.view.quorum(),
             quorum_is_majority=self.cfg.commit_ack_quorum_is_majority)
         if d == Decision.WAIT:
             return
@@ -1011,7 +1264,7 @@ class Machine:
         # shared with the batched engine in repro.core.proposer_vector.
         if not proposer.abd_fold(ab, rep):
             return
-        d = proposer.decide_abd(ab, majority=self.cfg.majority)
+        d = proposer.decide_abd(ab, majority=self.view.quorum())
         if d == Decision.WAIT:
             return
         if d == Decision.ABD_W2:

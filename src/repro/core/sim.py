@@ -26,7 +26,12 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from .node import Completion, Machine, ProtocolConfig, ReqKind, Request
 from .proposer import PauseEvent
-from .types import RmwOp
+from .types import Msg, MsgKind, RmwOp, View
+
+# control-plane kinds delivered even to machines outside the active view:
+# VIEW is how a removed/lagging machine learns the membership it is not in;
+# SYNC is how a joiner (not yet heard of by every member) gets its snapshot.
+_VIEW_EXEMPT_KINDS = (MsgKind.VIEW, MsgKind.SYNC)
 
 
 @dataclasses.dataclass
@@ -55,7 +60,11 @@ class Network:
         self._seq = itertools.count()
         self.now = 0.0
         self.partitioned: set = set()          # frozenset pairs that can't talk
-        self.stats = {"sent": 0, "dropped": 0, "duplicated": 0, "delivered": 0}
+        # the active view's member set (Cluster keeps it in sync): messages
+        # addressed outside it are dropped like any unreachable destination
+        self.members: set = set(range(n))
+        self.stats = {"sent": 0, "dropped": 0, "duplicated": 0,
+                      "delivered": 0, "removed_dst": 0}
 
     def partition(self, group_a: Sequence[int], group_b: Sequence[int]) -> None:
         for a in group_a:
@@ -91,10 +100,23 @@ class Network:
         delivered: ``Machine.deliver`` discards it anyway (crash-stop), so
         counting it as delivered would make ``delivered`` disagree with the
         number of messages that actually reached an inbox.
+
+        A message addressed to a machine *outside the active view* is also
+        dropped — a distinct case from crashed-dst (the process may be
+        running, but the membership no longer routes to it), counted
+        separately in ``removed_dst``.  VIEW/SYNC control messages are
+        exempt: they are the catch-up plane for exactly those machines.
         """
         delivered = 0
         while self.heap and self.heap[0][0] <= until:
             t, _, dst, payload = heapq.heappop(self.heap)
+            if dst >= len(machines) or (
+                    dst not in self.members
+                    and not (isinstance(payload, Msg)
+                             and payload.kind in _VIEW_EXEMPT_KINDS)):
+                self.stats["dropped"] += 1
+                self.stats["removed_dst"] += 1
+                continue
             if not machines[dst].alive:
                 self.stats["dropped"] += 1
                 continue
@@ -183,6 +205,82 @@ class Cluster:
     def crash(self, mid: int) -> None:
         self.machines[mid].crash()
 
+    # -- membership ----------------------------------------------------------
+
+    @property
+    def active_view(self) -> View:
+        """Highest-epoch view installed by any live machine."""
+        best = View.initial(self.cfg.n_machines)
+        for m in self.machines:
+            if m.view.epoch > best.epoch:
+                best = m.view
+        return best
+
+    def _sync_view(self) -> None:
+        """Keep ``network.members`` aligned with the active view.
+
+        The network models the routing layer: once a view change commits
+        somewhere, traffic to machines outside it is undeliverable (the
+        removed-dst drop in :meth:`Network.deliver_due`), while machines
+        that haven't installed the view yet keep running until fenced.
+        """
+        self.network.members = set(self.active_view.members)
+
+    def add_machine(self, mid: int, *, syncing: bool = True) -> Machine:
+        """Spawn (or respawn) machine ``mid`` so a view that includes it can
+        route to it.  The new machine starts in catch-up mode: it JOIN_REQs
+        a snapshot from the current members and does not vote until the
+        snapshot is installed (``Machine.begin_catchup``).
+
+        A *same-mid* rejoin is the same physical machine returning with
+        its disk: acceptor state (KV metadata incl. promises, the rmw-id
+        registry, commit/write logs) carries over exactly as in
+        :meth:`restart` — discarding it could silently forget decided log
+        slots whose only durable copies it held.  A never-before-seen mid
+        starts empty and inherits a donor's log via the snapshot replay.
+        """
+        old = self.machines[mid] if mid < len(self.machines) else None
+        if old is not None:
+            incarnation = old.incarnation + 1
+            traced_msgs = old.msg_trace is not None
+            traced_issuer = old.issuer_trace is not None
+        else:
+            incarnation = 0
+            traced_msgs = any(m.msg_trace is not None for m in self.machines)
+            traced_issuer = any(m.issuer_trace is not None
+                                for m in self.machines)
+        fresh = self.machine_cls(mid, self.cfg, self.network.send,
+                                 lambda: self.network.now,
+                                 incarnation=incarnation,
+                                 view=self.active_view)
+        if old is not None:
+            fresh.kvs = old.kvs
+            fresh.registry = old.registry
+            fresh.write_clock = old.write_clock
+            fresh.commit_log = old.commit_log
+            fresh.write_log = old.write_log
+        if traced_msgs:
+            fresh.msg_trace = []
+        if traced_issuer:
+            fresh.issuer_trace = []
+        if syncing:
+            fresh.begin_catchup()
+        while len(self.machines) <= mid:
+            self.machines.append(fresh)  # placeholder overwritten below
+        self.machines[mid] = fresh
+        return fresh
+
+    def join(self, mid: Optional[int] = None, *,
+             max_ticks: int = 200_000) -> int:
+        """Add a machine to the membership via a CP-decided view change."""
+        from repro.reconfig.controller import ReconfigController
+        return ReconfigController(self).join(mid, max_ticks=max_ticks)
+
+    def leave(self, mid: int, *, max_ticks: int = 200_000) -> None:
+        """Remove a machine from the membership via a CP view change."""
+        from repro.reconfig.controller import ReconfigController
+        ReconfigController(self).leave(mid, max_ticks=max_ticks)
+
     def restart(self, mid: int) -> None:
         """Crash-recover from stable storage.
 
@@ -198,7 +296,12 @@ class Cluster:
         old = self.machines[mid]
         fresh = self.machine_cls(mid, self.cfg, self.network.send,
                                  lambda: self.network.now,
-                                 incarnation=old.incarnation + 1)
+                                 incarnation=old.incarnation + 1,
+                                 view=old.view)
+        fresh.retired = old.retired
+        if old.syncing:
+            # snapshot never arrived before the crash: ask again
+            fresh.begin_catchup()
         fresh.kvs = old.kvs
         fresh.registry = old.registry
         fresh.write_clock = old.write_clock
@@ -226,6 +329,8 @@ class Cluster:
                 for sess, comp in m.completions:
                     self._complete(m.mid, sess, comp)
                 m.completions.clear()
+            if self.cfg.reconfig:
+                self._sync_view()
 
     def _complete(self, mid: int, sess: int, comp: Completion) -> None:
         self.completions.append((mid, sess, comp))
@@ -242,8 +347,10 @@ class Cluster:
         for _ in range(max_ticks):
             self.step()
             busy = any(not m.session_idle(s)
-                       for m in self.machines if m.alive
+                       for m in self.machines if m.alive and not m.retired
                        for s in range(self.cfg.sessions_per_machine))
+            busy = busy or any(m.alive and m.syncing and not m.retired
+                               for m in self.machines)
             if not busy and not self.network.pending():
                 quiet += 1
                 if quiet >= extra:
@@ -260,6 +367,12 @@ class Cluster:
             for k, v in m.stats.items():
                 out[k] = out.get(k, 0) + v
         out.update({f"net_{k}": v for k, v in self.network.stats.items()})
+        view = self.active_view
+        out["view_epoch"] = view.epoch
+        out["view_members"] = view.n
+        out["machines_retired"] = sum(1 for m in self.machines if m.retired)
+        out["machines_syncing"] = sum(1 for m in self.machines
+                                      if m.alive and m.syncing)
         return out
 
 
@@ -280,15 +393,22 @@ def completion_tuples(cluster: Cluster) -> List[Tuple]:
 def workload(cluster: Cluster, *, n_ops: int, keys: int,
              rmw_frac: float = 1.0, write_frac: float = 0.0,
              seed: int = 0, op: RmwOp = RmwOp.FAA,
-             cas_mode: bool = False) -> List[int]:
-    """Feed a mixed open-loop workload round-robin over machines/sessions."""
+             cas_mode: bool = False, key_base: int = 0,
+             mids: Optional[Sequence[int]] = None) -> List[int]:
+    """Feed a mixed open-loop workload round-robin over machines/sessions.
+
+    ``key_base`` offsets the key range (reconfig deployments reserve key 0
+    for the config register); ``mids`` restricts the round-robin to a
+    subset of machines (e.g. the active view's members).
+    """
     rng = random.Random(seed)
     cfg = cluster.cfg
+    pool = list(mids) if mids is not None else list(range(cfg.n_machines))
     tags = []
     for i in range(n_ops):
-        mid = i % cfg.n_machines
-        sess = (i // cfg.n_machines) % cfg.sessions_per_machine
-        key = rng.randrange(keys)
+        mid = pool[i % len(pool)]
+        sess = (i // len(pool)) % cfg.sessions_per_machine
+        key = key_base + rng.randrange(keys)
         r = rng.random()
         if r < rmw_frac:
             if cas_mode:

@@ -121,8 +121,95 @@ class HelpFlag(enum.IntEnum):
 
 
 # ---------------------------------------------------------------------------
+# Membership views (live reconfiguration)
+# ---------------------------------------------------------------------------
+
+# The issuer engine folds replies into per-source bitmaps
+# (``proposer_vector``: ``1 << clip(src, 0, 7)``), so machine ids must fit
+# one byte's worth of bitmap lanes.  The paper deploys 3–7 machines (§2);
+# 8 leaves join-before-leave headroom without widening the engines.
+MAX_MEMBERS = 8
+
+# The reserved config register: the active View lives in this key and is
+# changed only via normal CP RMWs (CAS) through the ordinary proposer path.
+# Client workloads that coexist with reconfiguration must keep their keys
+# above it (see ``sim.workload(key_base=...)``).
+CONFIG_KEY = 0
+
+
+class View(NamedTuple):
+    """A membership view: epoch + the member set, decided in the config
+    register.  Encoded into one int32 register value as
+    ``epoch << MAX_MEMBERS | member-bitmap``, so a view change is just a
+    CAS on :data:`CONFIG_KEY`.
+
+    This is THE home of quorum arithmetic: classic majority quorums come
+    from :meth:`quorum`, the all-aboard superquorum from
+    :meth:`all_aboard_quorum`.  Single-member deltas (enforced by
+    ``repro.reconfig.views.validate_transition``) keep consecutive views'
+    majority quorums intersecting, which is what makes deciding the next
+    view in the *old* view's quorums safe.
+    """
+
+    epoch: int
+    members: Tuple[int, ...]
+
+    @property
+    def n(self) -> int:
+        return len(self.members)
+
+    def quorum(self) -> int:
+        """Classic-Paxos majority quorum size for this view."""
+        return View.quorum_of(len(self.members))
+
+    def all_aboard_quorum(self) -> int:
+        """§9 all-aboard superquorum: every member must ack."""
+        return len(self.members)
+
+    @staticmethod
+    def quorum_of(n: int) -> int:
+        """The single definition of a majority over ``n`` machines."""
+        return n // 2 + 1
+
+    @staticmethod
+    def initial(n_machines: int) -> "View":
+        return View(0, tuple(range(n_machines)))
+
+    def encode(self) -> int:
+        bits = 0
+        for m in self.members:
+            bits |= 1 << m
+        return (self.epoch << MAX_MEMBERS) | bits
+
+    @staticmethod
+    def decode(value: int) -> Optional["View"]:
+        """Decode a config-register value; ``None`` for the unset register
+        (value 0 → the deployment's initial view applies)."""
+        if value is None or value <= 0:
+            return None
+        bits = value & ((1 << MAX_MEMBERS) - 1)
+        members = tuple(m for m in range(MAX_MEMBERS) if (bits >> m) & 1)
+        if not members:
+            return None
+        return View(value >> MAX_MEMBERS, members)
+
+
+# ---------------------------------------------------------------------------
 # Wire messages (§3.1 "Message Types", §10.3, §11)
 # ---------------------------------------------------------------------------
+#
+# Epoch fencing rule (live reconfiguration):
+#   every protocol Msg/Reply carries the sender's view ``epoch``.  A machine
+#   in view E drops any protocol payload whose epoch != E — stale traffic
+#   (epoch < E) additionally triggers a VIEW notice back to the sender so it
+#   can catch up; ahead-of-us traffic (epoch > E) is dropped until the
+#   commit/VIEW announcement installs the newer view here.  Three kinds are
+#   exempt because they ARE the catch-up plane and never count toward
+#   quorums: VIEW (announce a committed view; delivered even to removed
+#   machines), JOIN_REQ (a syncing joiner asking a member for a snapshot)
+#   and SYNC (the snapshot answer; carries committed state only).  Together
+#   with every in-flight round restarting its tally on view install, this
+#   guarantees no quorum ever mixes replies from two different views.
 
 class MsgKind(enum.IntEnum):
     PROPOSE = 0
@@ -139,6 +226,11 @@ class MsgKind(enum.IntEnum):
     READ_QUERY = 10        # ABD read round 1: carstamp compare
     READ_QUERY_REPLY = 11
     READ_COMMIT = 12       # §11 read write-back: commit semantics, ABD issuer
+    # reconfiguration control plane (host-intercepted; never reach the
+    # receiver engine and never count toward protocol quorums)
+    VIEW = 13              # committed-view announcement (encoded in `value`)
+    JOIN_REQ = 14          # syncing joiner -> member: send me a snapshot
+    SYNC = 15              # member -> joiner: snapshot blob + donor view
 
 
 class Rep(enum.IntEnum):
@@ -184,6 +276,8 @@ class Msg:
     base_ts: TS = TS_ZERO            # carstamp base (§10.3)
     val_log: int = 0                 # carstamp log part carried by commits
     lid: int = 0
+    epoch: int = 0                   # sender's view epoch (fencing rule above)
+    blob: object = None              # SYNC only: the snapshot tree
 
     def size_bytes(self) -> int:
         """Approximate wire size; used by the message-count/bytes benchmarks."""
@@ -212,6 +306,7 @@ class Reply:
     value: Optional[int] = None
     base_ts: TS = TS_ZERO
     val_log: int = 0
+    epoch: int = 0                   # sender's view epoch (fencing rule above)
 
     def size_bytes(self) -> int:
         base = 1 + 1 + 1 + 8 + 4

@@ -173,7 +173,18 @@ class SteeringTable:
     def __init__(self, n_lanes: int):
         self.n_lanes = n_lanes
         self._live: List[List[int]] = [[0, 0] for _ in range(n_lanes)]
-        self.stats = {"steered": 0, "dropped": 0, "stale": 0}
+        self.epoch = 0
+        self.stats = {"steered": 0, "dropped": 0, "stale": 0,
+                      "view_remaps": 0}
+
+    def remap(self, epoch: int) -> None:
+        """Note a view install.  Lids are machine-local (they encode the
+        issuing session, not the membership), so routing is unchanged
+        across views — cross-epoch replies are fenced *before* steering
+        (``Machine._admit``); this only tracks the epoch for stats."""
+        if epoch != self.epoch:
+            self.epoch = epoch
+            self.stats["view_remaps"] += 1
 
     def register(self, lane: int, lid: int, abd: bool = False) -> None:
         if 0 <= lane < self.n_lanes:

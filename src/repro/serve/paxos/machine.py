@@ -46,7 +46,7 @@ from repro.core.proposer import (
     ABD_PAUSED, AbdPhase, AbdRound, Decision, Phase, RmwRound,
 )
 from repro.core.types import (
-    Carstamp, HelpFlag, Msg, Reply, RmwId, TS, Tally,
+    Carstamp, HelpFlag, Msg, MsgKind, Reply, RmwId, TS, Tally, View,
 )
 from repro.core.vector import MsgBatch, ReplyBatch
 from repro.kernels.paxos_apply import ops
@@ -62,10 +62,10 @@ class BatchedMachine(Machine):
     _wants_round_events = True
 
     def __init__(self, mid: int, cfg: ProtocolConfig, send, now,
-                 incarnation: int = 0, *, use_kernel: bool = False,
-                 interpret: bool = True, block_rows: int = 32,
-                 batch_target: Optional[int] = None):
-        super().__init__(mid, cfg, send, now, incarnation)
+                 incarnation: int = 0, view: Optional[View] = None, *,
+                 use_kernel: bool = False, interpret: bool = True,
+                 block_rows: int = 32, batch_target: Optional[int] = None):
+        super().__init__(mid, cfg, send, now, incarnation, view=view)
         # authoritative receiver state = engine planes behind the bridge
         self.kvs = bridge.KVBridge()
         # authoritative issuer state = ProposerTable planes (numpy, host
@@ -87,17 +87,48 @@ class BatchedMachine(Machine):
         self.interpret = interpret
         self.block_rows = block_rows
         self.batch_target = batch_target
-        self._commit_need = (cfg.majority - 1
-                             if cfg.commit_ack_quorum_is_majority else 1)
         self.engine_stats = {"receiver_batches": 0, "receiver_lanes": 0,
                              "issuer_batches": 0, "issuer_lanes": 0}
+
+    @property
+    def _commit_need(self) -> int:
+        # reads the active view so a view change resizes the commit-ack
+        # quorum like every other tally (§8.7)
+        return (self.view.quorum() - 1
+                if self.cfg.commit_ack_quorum_is_majority else 1)
 
     # =================================================================
     # worker loop: batched inbox processing
     # =================================================================
 
+    # control-plane kinds are host-intercepted before the engines
+    _CONTROL_KINDS = (MsgKind.VIEW, MsgKind.SYNC, MsgKind.JOIN_REQ)
+
+    def _fenced_or_control(self, payload) -> bool:
+        """Exactly the consume-predicate of ``Machine._admit`` — evaluated
+        *before* batching so pending engine runs can be flushed first (a
+        snapshot served or a view installed mid-run would otherwise see
+        lane state the scalar machine, which applies the earlier inbox
+        messages immediately, has already advanced past)."""
+        if not self.cfg.reconfig:
+            return False
+        if isinstance(payload, Msg) and payload.kind in self._CONTROL_KINDS:
+            return True
+        if self.retired or self.syncing:
+            return True
+        return payload.epoch != self.view.epoch
+
     def step(self) -> None:
         if not self.alive:
+            return
+        if self.retired:
+            self.inbox.clear()
+            return
+        if self.syncing:
+            while self.inbox:
+                self._admit(self.inbox.popleft())
+            if self.syncing:
+                self._drive_catchup()
             return
         out_replies: List[Tuple[int, Reply]] = []
         # Process the inbox as alternating message/reply runs: messages and
@@ -107,8 +138,26 @@ class BatchedMachine(Machine):
         # free under the conflict rules.
         run_msgs: List[Msg] = []
         run_reps: List[Reply] = []
+
+        def flush_runs() -> None:
+            nonlocal run_msgs, run_reps
+            if run_reps:
+                self._issuer_flush(run_reps)
+                run_reps = []
+            if run_msgs:
+                self._receiver_flush(run_msgs, out_replies)
+                run_msgs = []
+
         while self.inbox:
             payload = self.inbox.popleft()
+            if self._fenced_or_control(payload):
+                # flush before the host intercept so engine state is
+                # current when a snapshot is served or a view installs
+                # (runs never span an install boundary, which is what
+                # keeps reply-epoch stamping at flush time scalar-exact)
+                flush_runs()
+                self._admit(payload)
+                continue
             if isinstance(payload, Msg):
                 if run_reps:
                     self._issuer_flush(run_reps)
@@ -119,10 +168,7 @@ class BatchedMachine(Machine):
                     self._receiver_flush(run_msgs, out_replies)
                     run_msgs = []
                 run_reps.append(payload)
-        if run_reps:
-            self._issuer_flush(run_reps)
-        if run_msgs:
-            self._receiver_flush(run_msgs, out_replies)
+        flush_runs()
         # receiver replies go out after the whole inbox, in arrival order —
         # same send sequence as the scalar worker loop (§3.1.3 step 3)
         for dst, rep in out_replies:
@@ -140,6 +186,7 @@ class BatchedMachine(Machine):
             # fold round-start self-notes from inspection/probe now, so the
             # tally state entering the next tick matches the scalar machine
             self._issuer_flush([])
+        self._poll_config_register()
 
     # =================================================================
     # receiver half: one vector step per conflict-free batch
@@ -177,6 +224,10 @@ class BatchedMachine(Machine):
                   for f, p in zip(ReplyBatch._fields, replies)}
         for msg in batch:
             rep = bridge.reply_from_lanes(rep_np, msg, src=self.mid)
+            # runs never span a view install (step flushes before any
+            # control-plane intercept), so stamping at flush time matches
+            # the scalar machine's at-handling-time epoch
+            rep.epoch = self.view.epoch
             if msg.kind in _COMMIT_KINDS:
                 self._record_commit(msg.key, msg.log_no, msg.rmw_id,
                                     msg.value, msg.base_ts,
@@ -240,8 +291,8 @@ class BatchedMachine(Machine):
             *[jnp.asarray(repb[f])
               for f in proposer_vector.IssuerReplyBatch._fields])
         table, actions = proposer_vector.proposer_step(
-            table, batchv, n_machines=self.cfg.n_machines,
-            majority=self.cfg.majority, commit_need=self._commit_need,
+            table, batchv, n_machines=self.view.all_aboard_quorum(),
+            majority=self.view.quorum(), commit_need=self._commit_need,
             log_too_high_threshold=self.cfg.log_too_high_threshold)
         for f, plane in zip(proposer_vector.ProposerTable._fields, table):
             self.lanes[f] = np.array(plane, np.int32)
@@ -392,4 +443,21 @@ class BatchedMachine(Machine):
 
     def crash(self) -> None:
         super().crash()
+        self._notes.clear()
+
+    # =================================================================
+    # live reconfiguration hooks
+    # =================================================================
+
+    def _install_view(self, view: View) -> bool:
+        installed = super()._install_view(view)
+        if installed:
+            # lid routing survives a view change (lids are machine-local),
+            # but the steering table tracks the epoch for observability
+            self.steering.remap(self.view.epoch)
+        return installed
+
+    def _retire(self) -> None:
+        super()._retire()
+        # parked lanes must not fold queued self-notes later
         self._notes.clear()

@@ -1,0 +1,390 @@
+"""Live reconfiguration: view register, epoch fencing, snapshot catch-up.
+
+The acceptance bar for the subsystem (see ROADMAP): a join/leave/rejoin
+storm under a faulty network — crashes and partitions overlapping the view
+changes — keeps every safety checker green, and ``BatchedMachine`` runs
+the same scripted storm completion-for-completion identical to the scalar
+cluster.  scripts/reconfig_smoke.py runs the 20-seed matrix in CI; here
+the unit/property layer: View codec round-trips, transition validation,
+the snapshot round-trip through ``repro.checkpoint.store``, replay-tail
+merge, epoch fencing of removed members, and representative storm seeds.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import checkers
+from repro.core.node import Machine, ProtocolConfig
+from repro.core.sim import Cluster, NetConfig, completion_tuples, workload
+from repro.core.types import CONFIG_KEY, MAX_MEMBERS, RmwOp, View
+from repro.reconfig import (
+    install_snapshot, joined, left, load_snapshot, replay_tail,
+    save_snapshot, snapshot_equal, take_snapshot, validate_transition,
+)
+from repro.reconfig.catchup import SCHEMA
+from repro.serve.paxos import BatchedMachine
+
+
+def reconfig_cluster(machine_cls=Machine, *, n=3, sessions=2, seed=0,
+                     faulty=False, all_aboard=False):
+    cfg = ProtocolConfig(n_machines=n, sessions_per_machine=sessions,
+                        reconfig=True, all_aboard=all_aboard)
+    if faulty:
+        net = NetConfig(seed=seed, drop_prob=0.06, dup_prob=0.05,
+                        heavy_tail_prob=0.03, heavy_tail_extra=25.0)
+    else:
+        net = NetConfig(seed=seed)
+    return Cluster(cfg, net, machine_cls=machine_cls)
+
+
+# ---------------------------------------------------------------------------
+# View codec + quorum arithmetic
+# ---------------------------------------------------------------------------
+
+class TestViewCodec:
+    def test_initial(self):
+        v = View.initial(3)
+        assert v.epoch == 0 and v.members == (0, 1, 2)
+        assert v.quorum() == 2 and v.all_aboard_quorum() == 3
+
+    def test_quorum_of(self):
+        assert [View.quorum_of(n) for n in (1, 2, 3, 4, 5, 6, 7)] == \
+            [1, 2, 2, 3, 3, 4, 4]
+
+    def test_round_trip_examples(self):
+        for epoch in (0, 1, 7, 1000):
+            for members in ((0,), (0, 2), (1, 3, 5), tuple(range(8))):
+                v = View(epoch, members)
+                assert View.decode(v.encode()) == v
+
+    def test_decode_unset_and_garbage(self):
+        assert View.decode(0) is None
+        assert View.decode(-5) is None
+        assert View.decode(None) is None
+        # epoch bits set but empty member bitmap
+        assert View.decode(3 << MAX_MEMBERS) is None
+
+    def test_encode_zero_epoch_nonzero(self):
+        # epoch-0 views still encode to a nonzero register value (the
+        # bitmap), so decode(encode(v)) never aliases the unset register
+        v = View(0, (0, 1, 2))
+        assert v.encode() != 0 and View.decode(v.encode()) == v
+
+
+def test_view_codec_property():
+    hypothesis = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hypothesis.settings(max_examples=200, deadline=None)
+    @hypothesis.given(epoch=st.integers(0, 2**20),
+                      members=st.sets(st.integers(0, MAX_MEMBERS - 1),
+                                      min_size=1, max_size=MAX_MEMBERS))
+    def inner(epoch, members):
+        v = View(epoch, tuple(sorted(members)))
+        raw = v.encode()
+        assert raw > 0
+        assert View.decode(raw) == v
+
+    inner()
+
+
+# ---------------------------------------------------------------------------
+# Transition validation (single-member delta rule)
+# ---------------------------------------------------------------------------
+
+class TestTransitions:
+    def test_join_one(self):
+        cur = View.initial(3)
+        new = validate_transition(cur, (0, 1, 2, 3))
+        assert new.epoch == 1 and new.members == (0, 1, 2, 3)
+        assert joined(cur, new) == (3,) and left(cur, new) == ()
+
+    def test_leave_one(self):
+        cur = View(4, (0, 1, 2, 3))
+        new = validate_transition(cur, (0, 2, 3))
+        assert new.epoch == 5 and new.members == (0, 2, 3)
+        assert joined(cur, new) == () and left(cur, new) == (1,)
+
+    def test_rejects_bad_deltas(self):
+        cur = View.initial(3)
+        with pytest.raises(ValueError):
+            validate_transition(cur, ())              # empty view
+        with pytest.raises(ValueError):
+            validate_transition(cur, (0, 1, 2))       # no change
+        with pytest.raises(ValueError):
+            validate_transition(cur, (0, 1, 2, 3, 4))  # two joins
+        with pytest.raises(ValueError):
+            validate_transition(cur, (0, 3))          # leave + join at once
+        with pytest.raises(ValueError):
+            validate_transition(cur, (0, 1, 2, MAX_MEMBERS))  # out of range
+
+    def test_consecutive_quorums_intersect(self):
+        # the safety argument behind the single-member rule, exhaustively
+        # for every reachable pair (old view, new view)
+        for n in range(1, MAX_MEMBERS):
+            old = View(0, tuple(range(n)))
+            grow = validate_transition(old, tuple(range(n + 1)))
+            assert old.quorum() + grow.quorum() > grow.n
+            if n > 1:
+                shrink = validate_transition(old, tuple(range(n - 1)))
+                assert old.quorum() + shrink.quorum() > old.n
+
+
+# ---------------------------------------------------------------------------
+# Snapshot round-trip (property: planes -> store -> planes, plane-for-plane)
+# ---------------------------------------------------------------------------
+
+def _loaded_cluster(machine_cls, seed):
+    cl = reconfig_cluster(machine_cls, seed=seed)
+    workload(cl, n_ops=24, keys=4, seed=seed, rmw_frac=0.6,
+             write_frac=0.3, key_base=1)
+    assert cl.run_until_quiet()
+    return cl
+
+
+@pytest.mark.parametrize("machine_cls", [Machine, BatchedMachine])
+def test_snapshot_store_round_trip(machine_cls, tmp_path):
+    """Receiver planes + ProposerTable lanes -> store -> restore is
+    plane-for-plane identical (the joiner sees exactly donor state)."""
+    cl = _loaded_cluster(machine_cls, seed=3)
+    m = cl.machines[0]
+    snap = take_snapshot(m)
+    assert np.asarray(snap["schema"]).reshape(-1)[0] == SCHEMA
+    if machine_cls is BatchedMachine:
+        assert any(k.startswith("lane_") for k in snap)
+    assert save_snapshot(m, str(tmp_path), "snap")
+    like = {k: np.zeros_like(v) for k, v in snap.items()}
+    back = load_snapshot(str(tmp_path), "snap", like)
+    assert snapshot_equal(snap, back)
+
+
+def test_snapshot_round_trip_property(tmp_path):
+    hypothesis = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hypothesis.settings(
+        max_examples=8, deadline=None,
+        suppress_health_check=[hypothesis.HealthCheck.too_slow])
+    @hypothesis.given(seed=st.integers(0, 2**16),
+                      n_ops=st.integers(5, 40), keys=st.integers(1, 5),
+                      batched=st.booleans())
+    def inner(seed, n_ops, keys, batched):
+        cl = reconfig_cluster(BatchedMachine if batched else Machine,
+                              seed=seed)
+        workload(cl, n_ops=n_ops, keys=keys, seed=seed, rmw_frac=0.5,
+                 write_frac=0.3, key_base=1)
+        cl.run_until_quiet()
+        for m in cl.machines:
+            snap = take_snapshot(m)
+            run = f"m{m.mid}s{seed}"
+            assert save_snapshot(m, str(tmp_path), run)
+            like = {k: np.zeros_like(v) for k, v in snap.items()}
+            back = load_snapshot(str(tmp_path), run, like)
+            assert snapshot_equal(snap, back)
+
+    inner()
+
+
+def test_install_snapshot_transfers_state():
+    """A fresh machine installing a loaded donor's snapshot replays the
+    donor's full commit log and value planes."""
+    cl = _loaded_cluster(Machine, seed=5)
+    donor = cl.machines[0]
+    snap = take_snapshot(donor)
+
+    sink = []
+    fresh = Machine(7, cl.cfg, lambda *a: sink.append(a), lambda: 0.0)
+    install_snapshot(fresh, snap)
+    assert fresh.commit_log == donor.commit_log
+    assert fresh.write_clock >= donor.write_clock
+    assert fresh.registry.committed == donor.registry.committed
+    for key in donor.kvs:
+        assert fresh.kvs[key].value == donor.kvs[key].value
+        assert fresh.kvs[key].carstamp == donor.kvs[key].carstamp
+
+
+def test_replay_tail_idempotent():
+    cl = _loaded_cluster(Machine, seed=9)
+    donor = cl.machines[0]
+    snap = take_snapshot(donor)
+    sink = []
+    fresh = Machine(7, cl.cfg, lambda *a: sink.append(a), lambda: 0.0)
+    n = replay_tail(fresh, snap)
+    assert n == sum(len(s) for s in donor.commit_log.values())
+    # replaying the same tail again finds nothing new
+    assert replay_tail(fresh, snap) == 0
+    assert fresh.commit_log == donor.commit_log
+
+
+# ---------------------------------------------------------------------------
+# Live join / leave on the scalar cluster
+# ---------------------------------------------------------------------------
+
+def test_join_then_leave_scalar():
+    cl = reconfig_cluster(Machine)
+    workload(cl, n_ops=12, keys=3, seed=1, key_base=1)
+    assert cl.run_until_quiet()
+
+    mid = cl.join()
+    assert mid == 3
+    assert cl.active_view.epoch == 1
+    assert cl.active_view.members == (0, 1, 2, 3)
+    joiner = cl.machines[3]
+    assert not joiner.syncing and not joiner.retired
+    assert joiner.stats.get("sync_installed", 0) >= 1
+
+    cl.leave(1)
+    assert cl.active_view.epoch == 2
+    assert cl.active_view.members == (0, 2, 3)
+    assert cl.machines[1].retired
+
+    workload(cl, n_ops=12, keys=3, seed=2, key_base=1,
+             mids=cl.active_view.members)
+    assert cl.run_until_quiet()
+    checkers.check_all(cl)
+
+    st = cl.stats()
+    assert st["view_epoch"] == 2
+    assert st["view_members"] == 3
+    assert st["machines_retired"] == 1
+
+
+def test_removed_member_traffic_fenced():
+    """After a leave, payload traffic addressed to the removed machine is
+    dropped by the network (distinct from crashed-dst) and the member
+    itself fences any stale-epoch payloads that do slip through."""
+    cl = reconfig_cluster(Machine)
+    workload(cl, n_ops=8, keys=2, seed=4, key_base=1)
+    assert cl.run_until_quiet()
+    cl.leave(2)
+    assert cl.machines[2].retired
+    workload(cl, n_ops=16, keys=2, seed=5, key_base=1,
+             mids=cl.active_view.members)
+    assert cl.run_until_quiet()
+    checkers.check_all(cl)
+    st = cl.stats()
+    # no new commits land on the retired machine after its final epoch
+    assert st["view_epoch"] == 1 and st["machines_retired"] == 1
+
+
+def test_join_under_load_scalar():
+    """The joiner catches up while the workload is still in flight."""
+    cl = reconfig_cluster(Machine, faulty=True, seed=11)
+    workload(cl, n_ops=20, keys=3, seed=11, rmw_frac=0.6, write_frac=0.2,
+             key_base=1)
+    for _ in range(300):           # leave the workload genuinely in flight
+        cl.step()
+    mid = cl.join()
+    workload(cl, n_ops=10, keys=3, seed=12, key_base=1,
+             mids=cl.active_view.members)
+    assert cl.run_until_quiet()
+    assert not cl.machines[mid].syncing
+    checkers.check_all(cl)
+
+
+def test_rejoin_after_leave():
+    """A machine that left can rejoin under a fresh incarnation."""
+    cl = reconfig_cluster(Machine)
+    workload(cl, n_ops=10, keys=2, seed=6, key_base=1)
+    assert cl.run_until_quiet()
+    cl.leave(1)
+    workload(cl, n_ops=6, keys=2, seed=7, key_base=1,
+             mids=cl.active_view.members)
+    assert cl.run_until_quiet()
+    mid = cl.join(1)
+    assert mid == 1
+    assert 1 in cl.active_view.members
+    assert not cl.machines[1].retired and not cl.machines[1].syncing
+    workload(cl, n_ops=8, keys=2, seed=8, key_base=1)
+    assert cl.run_until_quiet()
+    checkers.check_all(cl)
+    assert cl.active_view.epoch == 2
+
+
+def test_check_view_transitions_rejects_epoch_jump():
+    cl = reconfig_cluster(Machine)
+    workload(cl, n_ops=6, keys=2, seed=3, key_base=1)
+    assert cl.run_until_quiet()
+    cl.join()
+    checkers.check_view_transitions(cl)        # green on the honest history
+    # forge a decided config-register slot that skips an epoch
+    bad = View(5, (0, 1, 2)).encode()
+    m = cl.machines[0]
+    slots = m.commit_log.setdefault(CONFIG_KEY, {})
+    from repro.core.types import RmwId
+    slots[len(slots) + 1] = (RmwId(-1, -1), bad, m.write_clock)
+    with pytest.raises(checkers.SafetyViolation):
+        checkers.check_view_transitions(cl)
+
+
+# ---------------------------------------------------------------------------
+# Scalar vs batched differential under view changes
+# ---------------------------------------------------------------------------
+
+def _storm(machine_cls, seed):
+    """Scripted 3 -> 5 -> 4 join/leave/rejoin storm with a crash and the
+    workload still in flight across view changes."""
+    cl = reconfig_cluster(machine_cls, faulty=True, seed=seed)
+    workload(cl, n_ops=16, keys=3, seed=seed, rmw_frac=0.5,
+             write_frac=0.3, key_base=1)
+    for _ in range(200):
+        cl.step()
+    cl.join()                                   # 3 -> 4
+    cl.join()                                   # 4 -> 5
+    workload(cl, n_ops=10, keys=3, seed=seed + 1, key_base=1,
+             mids=cl.active_view.members)
+    cl.leave(1)                                 # 5 -> 4
+    cl.crash(0)
+    workload(cl, n_ops=8, keys=3, seed=seed + 2, key_base=1,
+             mids=[m for m in cl.active_view.members if m != 0])
+    cl.restart(0)
+    assert cl.run_until_quiet(max_ticks=120_000)
+    checkers.check_all(cl)
+    return cl
+
+
+@pytest.mark.parametrize("seed", [0, 2])
+def test_storm_scalar_vs_batched(seed):
+    a = _storm(Machine, seed)
+    b = _storm(BatchedMachine, seed)
+    assert completion_tuples(a) == completion_tuples(b)
+    assert a.stats()["view_epoch"] == b.stats()["view_epoch"] == 3
+
+
+def test_batched_join_under_load():
+    cl = reconfig_cluster(BatchedMachine, faulty=True, seed=21)
+    workload(cl, n_ops=18, keys=3, seed=21, rmw_frac=0.6, write_frac=0.2,
+             key_base=1)
+    for _ in range(250):
+        cl.step()
+    mid = cl.join()
+    workload(cl, n_ops=8, keys=3, seed=22, key_base=1,
+             mids=cl.active_view.members)
+    assert cl.run_until_quiet(max_ticks=120_000)
+    assert not cl.machines[mid].syncing
+    checkers.check_all(cl)
+
+
+# ---------------------------------------------------------------------------
+# Legacy behavior unchanged when reconfig is off
+# ---------------------------------------------------------------------------
+
+def test_reconfig_off_is_bit_identical():
+    def run(reconfig):
+        cfg = ProtocolConfig(n_machines=3, sessions_per_machine=2,
+                            reconfig=reconfig)
+        net = NetConfig(seed=13, drop_prob=0.06, dup_prob=0.05)
+        cl = Cluster(cfg, net)
+        workload(cl, n_ops=20, keys=3, seed=13, rmw_frac=0.6,
+                 write_frac=0.3, key_base=1)
+        assert cl.run_until_quiet()
+        checkers.check_all(cl)
+        return completion_tuples(cl)
+
+    assert run(False) == run(True)
+
+
+def test_reconfig_requires_flag():
+    cl = Cluster(ProtocolConfig(n_machines=3), NetConfig(seed=0))
+    with pytest.raises(Exception):
+        cl.join()
