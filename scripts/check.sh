@@ -10,6 +10,11 @@ python -m pytest -q "$@"
 # benchmarks/bench_vector.py); writes BENCH_smoke.json, which CI uploads
 # as the perf-trajectory artifact (.github/workflows/ci.yml)
 python benchmarks/bench_vector.py --smoke
+# Perf-regression guard: the fresh smoke e2e batched/scalar ratio must
+# stay within 20% of the last tracked trajectory entry (skips cleanly
+# when no comparable baseline exists yet; --exclude-last 1 because the
+# smoke run above just appended its own row)
+python scripts/perf_guard.py --exclude-last 1
 # Batched-cluster smoke: >= 20 seeded faulty workloads (crash/restart and
 # all-aboard included) on Cluster(machine_cls=BatchedMachine), asserting
 # completions identical to the scalar cluster + linearizability checkers

@@ -1,0 +1,119 @@
+#!/usr/bin/env python
+"""CI perf-regression guard for the batched serve path.
+
+Compares the freshly-written ``BENCH_smoke.json`` e2e lane against the
+most recent comparable entry of the tracked perf history
+(``benchmarks/BENCH_trajectory.jsonl``) and fails when the
+batched-vs-scalar throughput ratio dropped more than ``--tolerance``
+(default 20%) below the baseline.
+
+Rules:
+
+* **No baseline -> skip.**  A fresh clone, a wiped trajectory, or a
+  history whose entries predate the fused-engine e2e schema (no ratio
+  derivable) exits 0 with a note — the guard gates *regressions*, it
+  does not invent a standard.
+* The baseline is the **last** trajectory entry with a derivable ratio:
+  the trajectory is append-only and ordered, so the last entry is the
+  ratio the previous commit shipped with.
+* Ratios (batched / scalar ops/s) are compared rather than absolute
+  ops/s so the guard is stable across differently-sized CI hosts — the
+  scalar cluster on the same box is the control.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def e2e_ratio(record: dict):
+    """batched/scalar client-ops ratio from a smoke record; None when the
+    record predates the e2e lane or lacks both impl rows."""
+    rows = record.get("e2e") or []
+    by_impl = {r.get("impl"): r for r in rows if isinstance(r, dict)}
+    batched, scalar = by_impl.get("batched"), by_impl.get("scalar")
+    if not batched:
+        return None
+    if "vs_scalar" in batched:
+        return float(batched["vs_scalar"])
+    if scalar and scalar.get("client_ops_per_s"):
+        return (batched.get("client_ops_per_s", 0)
+                / scalar["client_ops_per_s"])
+    return None
+
+
+def last_baseline(trajectory_path: str, exclude_last: int = 0):
+    """(ratio, git_sha) of the newest trajectory row with a derivable
+    ratio, or (None, None).  ``exclude_last`` skips that many trailing
+    rows — ``bench_vector --smoke`` appends its own row *before* the
+    guard runs, so gating right after a smoke run must not compare the
+    fresh row against itself."""
+    try:
+        with open(trajectory_path) as fh:
+            lines = [ln for ln in fh if ln.strip()]
+    except FileNotFoundError:
+        return None, None
+    if exclude_last:
+        lines = lines[:-exclude_last]
+    for ln in reversed(lines):
+        try:
+            rec = json.loads(ln)
+        except json.JSONDecodeError:
+            continue
+        ratio = e2e_ratio(rec)
+        if ratio is not None:
+            return ratio, rec.get("git_sha", "")
+    return None, None
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", default="BENCH_smoke.json",
+                    help="fresh smoke results (bench_vector --smoke output)")
+    ap.add_argument("--trajectory",
+                    default="benchmarks/BENCH_trajectory.jsonl",
+                    help="tracked perf history (append-only JSONL)")
+    ap.add_argument("--tolerance", type=float, default=0.20,
+                    help="allowed fractional drop below baseline "
+                         "(0.20 = fail below 80%% of baseline)")
+    ap.add_argument("--exclude-last", type=int, default=0, metavar="N",
+                    help="ignore the N newest trajectory rows (use 1 when "
+                         "running right after 'bench_vector --smoke', "
+                         "which has already appended the current run)")
+    args = ap.parse_args(argv)
+
+    try:
+        with open(args.smoke) as fh:
+            current = e2e_ratio(json.load(fh))
+    except (FileNotFoundError, json.JSONDecodeError) as exc:
+        print(f"perf_guard: cannot read {args.smoke} ({exc})")
+        return 1
+    if current is None:
+        print(f"perf_guard: {args.smoke} has no e2e lane — nothing to gate")
+        return 1
+
+    baseline, sha = last_baseline(args.trajectory, args.exclude_last)
+    if baseline is None:
+        print(f"perf_guard: no comparable baseline in {args.trajectory}; "
+              f"skipping (current e2e ratio {current:.3f})")
+        return 0
+
+    floor = baseline * (1.0 - args.tolerance)
+    verdict = "OK" if current >= floor else "REGRESSION"
+    print(f"perf_guard: e2e batched/scalar ratio {current:.3f} vs baseline "
+          f"{baseline:.3f}{f' @{sha}' if sha else ''} "
+          f"(floor {floor:.3f}): {verdict}")
+    if current < floor:
+        print("perf_guard: smoke e2e throughput ratio dropped more than "
+              f"{args.tolerance:.0%} below the last trajectory entry — "
+              "either fix the regression or, if intentional (e.g. a "
+              "correctness fix), append a fresh trajectory row explaining "
+              "it in the commit.")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -20,6 +20,7 @@ Wired into scripts/check.sh after the batched smoke; see
 
 from __future__ import annotations
 
+import functools
 import sys
 import time
 
@@ -30,6 +31,17 @@ from repro.serve.paxos import BatchedMachine
 
 SEEDS = range(20)
 ABOARD_SEEDS = frozenset((3, 9, 15))
+# these storms run the fused engine through the Pallas kernels (receiver
+# + issuer, interpret mode): view changes, crash/restart and catch-up
+# must be completion-identical under both use_kernel settings
+KERNEL_SEEDS = frozenset((2, 9, 14, 18))
+
+
+def batched_cls(seed: int):
+    if seed in KERNEL_SEEDS:
+        return functools.partial(BatchedMachine, use_kernel=True,
+                                 block_rows=1)
+    return BatchedMachine
 
 
 def storm(machine_cls, seed: int) -> Cluster:
@@ -82,7 +94,7 @@ def main() -> int:
     total_ops = 0
     for seed in SEEDS:
         scalar = storm(Machine, seed)
-        batched = storm(BatchedMachine, seed)
+        batched = storm(batched_cls(seed), seed)
         want, got = completion_tuples(scalar), completion_tuples(batched)
         if want != got:
             print(f"seed {seed}: batched completions diverged "
@@ -98,8 +110,9 @@ def main() -> int:
         total_ops += len(batched.history)
         st = batched.stats()
         mode = "aboard" if seed in ABOARD_SEEDS else "plain"
-        print(f"seed {seed:2d} [{mode:6s}]: {len(got):2d} completions "
-              f"identical, epoch {st['view_epoch']}, "
+        impl = "pallas" if seed in KERNEL_SEEDS else "jnp"
+        print(f"seed {seed:2d} [{mode:6s}/{impl:6s}]: {len(got):2d} "
+              f"completions identical, epoch {st['view_epoch']}, "
               f"{st['net_removed_dst']} fenced sends, checkers green")
     print(f"reconfig smoke OK: {len(list(SEEDS))} seeds, {total_ops} client "
           f"ops through 5 view changes each, completion-identical to "

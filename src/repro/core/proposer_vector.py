@@ -177,17 +177,20 @@ def _prio(out, cases):
 # The fused issuer step
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=(
-    "n_machines", "majority", "commit_need", "log_too_high_threshold"))
-def proposer_step(t: ProposerTable, rep: IssuerReplyBatch, *,
-                  n_machines: int, majority: int, commit_need: int,
-                  log_too_high_threshold: int
+def proposer_core(t: ProposerTable, rep: IssuerReplyBatch,
+                  n_machines, majority, commit_need,
+                  log_too_high_threshold
                   ) -> Tuple[ProposerTable, ActionBatch]:
-    """Ingest one conflict-free reply batch (at most one reply per session
-    lane), fold the tallies, decide, and emit the next outbound wave.
+    """The issuer select network, shape- and parameter-polymorphic.
 
-    Mirrors ``Machine._handle_reply`` + the :mod:`repro.core.proposer`
-    decision functions; see the module docstring for the host/engine split.
+    Pure and fully elementwise: planes may be 1-D ``(lanes,)`` or stacked
+    ``(machines, lanes)``, and the quorum parameters may be Python ints
+    (the classic per-machine jit below) or broadcastable int32 arrays (the
+    fused cluster engine passes per-machine ``(machines, 1)`` columns; the
+    :mod:`repro.kernels.paxos_propose` kernel passes per-lane planes).
+    Single definition shared by :func:`proposer_step`, the fused
+    cluster-engine step and the Pallas kernel body, so the three can never
+    drift apart.
     """
     active = rep.kind >= 0
 
@@ -442,3 +445,22 @@ def proposer_step(t: ProposerTable, rep: IssuerReplyBatch, *,
         best_vlog=best_vlog, best_val=best_val, best_log=best_log,
         best_cnt=best_cnt, best_sess=best_sess)
     return new_t, actions
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_machines", "majority", "commit_need", "log_too_high_threshold"))
+def proposer_step(t: ProposerTable, rep: IssuerReplyBatch, *,
+                  n_machines: int, majority: int, commit_need: int,
+                  log_too_high_threshold: int
+                  ) -> Tuple[ProposerTable, ActionBatch]:
+    """Ingest one conflict-free reply batch (at most one reply per session
+    lane), fold the tallies, decide, and emit the next outbound wave.
+
+    Mirrors ``Machine._handle_reply`` + the :mod:`repro.core.proposer`
+    decision functions; see the module docstring for the host/engine split.
+    Thin static-quorum jit over :func:`proposer_core` (one compilation per
+    deployment shape — a view change recompiles, which is fine: views
+    change rarely and the fused cluster engine passes quorums as data).
+    """
+    return proposer_core(t, rep, n_machines, majority, commit_need,
+                         log_too_high_threshold)

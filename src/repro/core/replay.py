@@ -39,9 +39,11 @@ the receiver replay).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from collections import deque
 from typing import Dict, List, Optional, Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -73,7 +75,8 @@ from repro.kernels.paxos_apply import ops
 
 __all__ = [
     "ReplayMismatch", "bucket_conflict_free", "kv_to_lanes", "msg_to_lanes",
-    "reply_to_lanes", "replay_trace", "replay_cluster", "run_and_replay",
+    "reply_to_lanes", "replay_trace", "replay_cluster",
+    "replay_cluster_fused", "run_and_replay", "run_and_replay_fused",
     "replay_issuer_trace", "replay_issuer_cluster", "run_and_replay_issuer",
 ]
 
@@ -239,6 +242,206 @@ def run_and_replay(seed: int, *, n_ops: int = 24, keys: int = 3,
         raise RuntimeError(f"sim (seed {seed}) did not quiesce")
     stats = replay_cluster(cluster, n_keys=keys, use_kernel=use_kernel,
                            interpret=interpret, block_rows=block_rows)
+    stats["history"] = len(cluster.history)
+    return stats
+
+
+# ===========================================================================
+# Fused (stacked-machine) replay: cluster ticks, plane-for-plane
+# ===========================================================================
+#
+# The device-resident ClusterEngine (repro.serve.paxos.cluster_engine)
+# stacks all N replicas' KV planes on a leading machine axis and runs ONE
+# fused receiver call per wave by flattening ``(M, K) -> (M*K,)`` lanes.
+# This replay drives the SAME flattening convention straight from recorded
+# message traces — machine ``i``'s batch ``w`` staged into row ``i`` of
+# wave ``w`` — and asserts, against N independent scalar-handler shadows,
+# that rows stay isolated: every reply, every KV plane of every row, and
+# every per-machine registry mirror are bit-identical after every fused
+# wave.  The registry gather stays host-side exactly as the engine does it
+# (the one cross-lane piece of the step): ``is_registered`` is computed
+# per staged lane against the machine's own mirror before the wave, and
+# commit-lane registrations max-merge back after it (out-of-range gsess
+# dropped, mirroring ops.scatter_register's dead-slot drop).
+#
+# Wave alignment across machines is arbitrary (machines with shorter
+# traces simply stop contributing rows) — apply_batch is elementwise, so
+# this checks precisely the row-isolation property the fused engine's
+# correctness argument rests on, with no serve-layer code imported.
+
+_FUSED_NOOP = {f: 0 for f in vector.MsgBatch._fields}
+_FUSED_NOOP["has_value"] = 1                    # matches MsgBatch.noop
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("use_kernel", "interpret", "block_rows"))
+def _fused_wave_step(kv_stack, msg_stack, is_reg, *, use_kernel,
+                     interpret, block_rows):
+    """One fused receiver wave: (18,M,K),(11,M,K),(M,K) ->
+    (18,M,K),(11,M,K),(M,K) — the ClusterEngine flattening convention
+    (machine axis folded into the lane axis, kernel path padded to the
+    block tile, padded lanes NOOP by construction)."""
+    n_kv = len(vector.KVTable._fields)
+    n_msg = len(vector.MsgBatch._fields)
+    m, k = is_reg.shape
+    n = m * k
+    kv = vector.KVTable(*[kv_stack[i].reshape(n) for i in range(n_kv)])
+    msg = vector.MsgBatch(*[msg_stack[i].reshape(n) for i in range(n_msg)])
+    reg = is_reg.reshape(n) != 0
+    if use_kernel:
+        tile = block_rows * ops.LANE
+        n_pad = ((n + tile - 1) // tile) * tile
+        pad = n_pad - n
+        kv_p = vector.KVTable(*[jnp.pad(a, (0, pad)) for a in kv])
+        msg_p = vector.MsgBatch(*[jnp.pad(a, (0, pad)) for a in msg])
+        new_kv, replies, mask = ops.paxos_apply(
+            kv_p, msg_p, jnp.pad(reg.astype(jnp.int32), (0, pad)),
+            block_rows=block_rows, interpret=interpret)
+        new_kv = vector.KVTable(*[a[:n] for a in new_kv])
+        replies = type(replies)(*[a[:n] for a in replies])
+        mask = mask[:n] != 0
+    else:
+        new_kv, replies, mask = vector.apply_batch(kv, msg, reg)
+    return (jnp.stack([a.reshape(m, k) for a in new_kv]),
+            jnp.stack([a.reshape(m, k) for a in replies]),
+            mask.reshape(m, k))
+
+
+def replay_cluster_fused(cluster: Cluster, *, n_keys: int,
+                         use_kernel: bool = True, interpret: bool = True,
+                         block_rows: int = 1,
+                         machines: Optional[Sequence[int]] = None
+                         ) -> Dict[str, int]:
+    """Replay every (or selected) machine's trace through fused ticks.
+
+    Unlike :func:`replay_cluster` (N independent single-machine replays),
+    all machines share each fused step: one ``(M*K,)`` engine call per
+    wave, exactly like the serve-path ClusterEngine.  Raises
+    :class:`ReplayMismatch` on the first reply, plane or registry
+    divergence of any row.
+    """
+    mids = list(machines if machines is not None
+                else range(len(cluster.machines)))
+    num_gsess = cluster.cfg.num_gsess
+    batches: List[List[List[Msg]]] = []
+    total_msgs = 0
+    for mid in mids:
+        trace = cluster.machines[mid].msg_trace
+        if trace is None:
+            raise ValueError(
+                f"machine {mid} has no msg_trace — call "
+                f"cluster.enable_msg_trace() before running the workload")
+        for msg in trace:
+            if msg.key >= n_keys:
+                raise ValueError(f"trace touches key {msg.key} >= n_keys "
+                                 f"{n_keys}")
+        total_msgs += len(trace)
+        batches.append(bucket_conflict_free(trace))
+
+    m = len(mids)
+    fields = vector.MsgBatch._fields
+    rep_fields = vector.ReplyBatch._fields
+    # scalar shadows (one per row) + the fused side's host registry mirror
+    kvs: List[Dict[int, KVPair]] = [{} for _ in mids]
+    regs = [Registry(num_gsess) for _ in mids]
+    freg = [[0] * num_gsess for _ in mids]
+    fresh = vector.KVTable.fresh(n_keys)
+    kv_stack = jnp.stack([jnp.broadcast_to(p, (m, n_keys)) for p in fresh])
+
+    n_waves = max((len(b) for b in batches), default=0)
+    kind_counts: Dict[str, int] = {}
+    for wave in range(n_waves):
+        msg_host = np.zeros((len(fields), m, n_keys), np.int32)
+        for i, f in enumerate(fields):
+            if _FUSED_NOOP[f]:
+                msg_host[i] = _FUSED_NOOP[f]
+        reg_host = np.zeros((m, n_keys), np.int32)
+        staged: List[tuple] = []
+        for row in range(m):
+            if wave >= len(batches[row]):
+                continue
+            for msg in batches[row][wave]:
+                lane = msg_to_lanes(msg)
+                for i, f in enumerate(fields):
+                    msg_host[i, row, msg.key] = lane[f]
+                gs, cnt = msg.rmw_id.gsess, msg.rmw_id.counter
+                # host mirror of ops.gather_is_registered (clip + compare)
+                reg_host[row, msg.key] = int(
+                    gs >= 0 and freg[row][min(gs, num_gsess - 1)] >= cnt)
+                staged.append((row, msg))
+        kv_stack, rep_stack, reg_mask = _fused_wave_step(
+            kv_stack, jnp.asarray(msg_host), jnp.asarray(reg_host),
+            use_kernel=use_kernel, interpret=interpret,
+            block_rows=block_rows)
+        rep_np = np.asarray(rep_stack)
+        mask_np = np.asarray(reg_mask)
+        for row, msg in staged:
+            rep = handlers.apply_msg(get_kv(kvs[row], msg.key), msg,
+                                     regs[row])
+            k = msg.kind.name.lower()
+            kind_counts[k] = kind_counts.get(k, 0) + 1
+            want = _expected_reply_lanes(rep)
+            got = {f: int(rep_np[rep_fields.index(f), row, msg.key])
+                   for f in want}
+            if got != want:
+                raise ReplayMismatch(
+                    f"fused reply diverged at wave {wave}, machine "
+                    f"{mids[row]}, key {msg.key}, msg {msg}:\n"
+                    f" scalar: {want}\n fused:  {got}")
+        # commit-lane registrations scatter back after the wave (max-merge,
+        # out-of-range dropped — ops.scatter_register's dead-slot contract)
+        for row, msg in staged:
+            if mask_np[row, msg.key]:
+                gs, cnt = msg.rmw_id.gsess, msg.rmw_id.counter
+                if 0 <= gs < num_gsess and cnt > freg[row][gs]:
+                    freg[row][gs] = cnt
+        for row in range(m):
+            if freg[row] != regs[row].committed:
+                raise ReplayMismatch(
+                    f"fused registry diverged at wave {wave}, machine "
+                    f"{mids[row]}:\n scalar: {regs[row].committed}\n"
+                    f" fused:  {freg[row]}")
+
+    # final state: every row, every lane, plane for plane
+    kv_np = np.asarray(kv_stack)
+    kv_fields = vector.KVTable._fields
+    for row in range(m):
+        for key in range(n_keys):
+            scalar_kv = kvs[row].get(key) or KVPair(key=key)
+            want = kv_to_lanes(scalar_kv)
+            got = {f: int(kv_np[i, row, key])
+                   for i, f in enumerate(kv_fields)}
+            if got != want:
+                diff = {f: (want[f], got[f])
+                        for f in want if want[f] != got[f]}
+                raise ReplayMismatch(
+                    f"fused final KV state diverged at machine {mids[row]},"
+                    f" key {key} (field: (scalar, fused)): {diff}")
+
+    stats = {"machines": m, "messages": total_msgs, "fused_waves": n_waves}
+    stats.update(kind_counts)
+    return stats
+
+
+def run_and_replay_fused(seed: int, *, n_ops: int = 24, keys: int = 3,
+                         cfg: Optional[ProtocolConfig] = None,
+                         net: Optional[NetConfig] = None,
+                         rmw_frac: float = 0.45, write_frac: float = 0.3,
+                         use_kernel: bool = True, interpret: bool = True,
+                         block_rows: int = 1) -> Dict[str, int]:
+    """End-to-end fused harness: seeded faulty sim -> stacked replay."""
+    cfg = cfg or ProtocolConfig(n_machines=5, sessions_per_machine=2)
+    net = net or NetConfig(seed=seed, drop_prob=0.06, dup_prob=0.05,
+                           heavy_tail_prob=0.03, heavy_tail_extra=25.0)
+    cluster = Cluster(cfg, net)
+    cluster.enable_msg_trace()
+    workload(cluster, n_ops=n_ops, keys=keys, seed=seed,
+             rmw_frac=rmw_frac, write_frac=write_frac, op=RmwOp.FAA)
+    if not cluster.run_until_quiet(max_ticks=120_000):
+        raise RuntimeError(f"sim (seed {seed}) did not quiesce")
+    stats = replay_cluster_fused(cluster, n_keys=keys,
+                                 use_kernel=use_kernel, interpret=interpret,
+                                 block_rows=block_rows)
     stats["history"] = len(cluster.history)
     return stats
 

@@ -152,6 +152,13 @@ class Cluster:
                         lambda: self.network.now)
             for mid in range(self.cfg.n_machines)
         ]
+        # Fused serve path (duck-typed, no core -> serve import): when the
+        # machine class provides attach_engine (repro.serve.paxos), the
+        # whole cluster ticks as one device-resident fused engine instead
+        # of N sequential per-machine steps.
+        attach = (getattr(self.machines[0], "attach_engine", None)
+                  if self.machines else None)
+        self.engine = attach(self.machines) if attach is not None else None
         self.completions: List[Tuple[int, int, Completion]] = []  # (mid, sess, c)
         # global-time intervals for the linearizability checker:
         # (key, kind, invoke_t, complete_t, value_read, value_written, rmw_id)
@@ -268,6 +275,10 @@ class Cluster:
         while len(self.machines) <= mid:
             self.machines.append(fresh)  # placeholder overwritten below
         self.machines[mid] = fresh
+        if self.engine is not None:
+            # (re)load exactly this machine's row of the stacked planes —
+            # the rest of the cluster keeps its device residency
+            self.engine.adopt(fresh)
         return fresh
 
     def join(self, mid: Optional[int] = None, *,
@@ -317,6 +328,11 @@ class Cluster:
                 fresh.issuer_trace.append(PauseEvent(s, 0))
                 fresh.issuer_trace.append(PauseEvent(s, 1))
         self.machines[mid] = fresh
+        if self.engine is not None:
+            # evict the dead incarnation's issuer row (volatile proposer
+            # state resets to defaults) while the durable KV row — carried
+            # by the shared bridge — stays resident untouched
+            self.engine.adopt(fresh)
 
     # -- driving -------------------------------------------------------------
 
@@ -324,8 +340,19 @@ class Cluster:
         for _ in range(ticks):
             self.rounds += 1
             self.network.deliver_due(self.network.now + 1.0, self.machines)
+            if self.engine is not None:
+                # fused tick: every machine's generator driven in waves,
+                # sends flushed in mid order (same global send sequence —
+                # and hence the same network RNG stream — as the
+                # sequential loop below)
+                self.engine.step_all(self.machines, self.network.send)
+            else:
+                for m in self.machines:
+                    m.step()
+            # completions drain in mid order either way (the sequential
+            # loop drains machine i before stepping i+1, and steps never
+            # couple within a tick, so the order is identical)
             for m in self.machines:
-                m.step()
                 for sess, comp in m.completions:
                     self._complete(m.mid, sess, comp)
                 m.completions.clear()

@@ -60,6 +60,15 @@ The per-session registered-rmw-id table needs gather/scatter and therefore
 lives *outside* the lane-parallel core: ``is_registered`` is a precomputed
 input lane, and commit registrations are returned for a segment-max scatter
 done by the jitted wrapper (see ``repro.kernels.paxos_apply.ops``).
+
+**Machine-axis batching.**  Because every lane transition here is
+elementwise (no cross-lane reads or writes), the lane axis composes
+freely: stacking N machines' tables as ``(M, K)`` planes and flattening
+to ``(M*K,)`` lanes runs N replica steps in ONE call, with rows isolated
+by construction.  The device-resident serve engine
+(``repro.serve.paxos.cluster_engine``) and the fused differential replay
+(:func:`repro.core.replay.replay_cluster_fused`) both rely on exactly
+this property; keep new transitions elementwise or they break it.
 """
 
 from __future__ import annotations

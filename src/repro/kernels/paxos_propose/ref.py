@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the paxos_propose kernel.
+
+The oracle *is* the vectorized issuer engine
+(`repro.core.proposer_vector.proposer_core`), which is itself replayed
+differentially against the scalar tally/decision transitions
+(tests/test_proposer_vector.py, tests/test_replay.py) — a two-link oracle
+chain ending at the paper's §4.3–§11 issuer pseudocode.
+"""
+
+from repro.core.proposer_vector import (
+    ActionBatch, IssuerReplyBatch, ProposerTable, proposer_core,
+)
+
+__all__ = ["ActionBatch", "IssuerReplyBatch", "ProposerTable",
+           "proposer_core"]

@@ -1,27 +1,36 @@
 """Host-side bridges between scalar machine state and the SIMD engines.
 
-The two batched engines are deliberately lane-parallel and pure: the
-receiver step (:func:`repro.kernels.paxos_apply.ops.replica_step`) and the
-issuer step (:func:`repro.core.proposer_vector.proposer_step`) never touch
-anything that needs gather/scatter across lanes.  Everything that does is
-the *host bridge*, defined here:
+The two batched engines are deliberately lane-parallel and pure: the fused
+receiver step and the fused issuer step (:mod:`.cluster_engine`) never
+touch anything that needs gather/scatter across lanes.  Everything that
+does is the *host bridge*, defined here:
 
-* :class:`KVBridge` — the per-key KV/registry gather–scatter bridge.  The
-  authoritative KV-pair metadata lives in struct-of-arrays planes (the
-  receiver engine's :class:`~repro.core.vector.KVTable`); host decisions
+* :class:`KVBridge` — the per-key KV gather–scatter bridge.  The
+  authoritative KV-pair metadata lives in the cluster's stacked
+  :class:`~.cluster_engine.PlaneStack` (the receiver engine's
+  :class:`~repro.core.vector.KVTable` planes with a leading machine axis);
+  each bridge is one machine's *row* of that stack.  Host decisions
   (grabbing the pair §4.1/§5, computing accept values §8.5/§10.1, local
   commits) *check out* scalar :class:`~repro.core.types.KVPair` views of
   single lanes, mutate them with the unchanged scalar code paths, and the
-  bridge scatters them back before the next engine step.  It quacks like
-  the ``Dict[int, KVPair]`` the scalar :class:`~repro.core.node.Machine`
-  uses, so ``handlers.get_kv`` and every host action work verbatim.
+  bridge scatters them back before the next fused engine step.  It quacks
+  like the ``Dict[int, KVPair]`` the scalar
+  :class:`~repro.core.node.Machine` uses, so ``handlers.get_kv`` and every
+  host action work verbatim.
 
-* :class:`SteeringTable` — the lid -> session-lane reply-steering table
-  (§3.1.2): round starts register their lid on the issuing lane; inbound
-  network replies are routed to their :class:`ProposerTable` lane (staleness
-  itself is decided *inside* the engine by the lid/phase gates — the table
-  only picks the lane and drops out-of-range lids, exactly like the scalar
-  machine's ``lid & 0xFFFF`` steering).
+* :class:`SteeringTable` — the lid -> (machine, session-lane) reply-steering
+  table (§3.1.2): round starts register their lid on the issuing lane;
+  inbound network replies are routed to their ProposerTable lane — in the
+  fused cluster engine a *coordinate* ``(machine row, lane)`` of the
+  stacked planes (staleness itself is decided *inside* the engine by the
+  lid/phase gates — the table only picks the lane and drops out-of-range
+  lids, exactly like the scalar machine's ``lid & 0xFFFF`` steering).
+
+The registry mirror of PR 5 (``registry_lanes`` / ``absorb_registry``) is
+gone: the fused engine computes ``is_registered`` per staged message
+against the machine's scalar registry and scatters commit registrations
+back host-side (see :mod:`.cluster_engine`), eliminating the per-batch
+list<->device round-trips.
 
 The scalar <-> lane converters and issuer round-lane loaders this bridge
 uses are defined in :mod:`repro.core.lanes` (shared with the differential
@@ -31,13 +40,11 @@ drift apart) and re-exported here as part of the bridge surface.
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import vector
-from repro.core.handlers import Registry
 # The scalar<->lane converters, issuer round-lane loaders and ActionBatch
 # payload helpers are protocol-level and live in repro.core.lanes (shared
 # with the differential replay harness without any core -> serve import);
@@ -50,43 +57,62 @@ from repro.core.lanes import (                                    # noqa: F401
 )
 from repro.core.types import KVPair
 
+from .cluster_engine import KV_DEFAULTS, PlaneStack
+
 I32 = np.int32
 
+# Re-exported: the old per-bridge defaults now live with the stack.
+_KV_DEFAULTS = KV_DEFAULTS
+
 
 # ---------------------------------------------------------------------------
-# The KV / registry gather-scatter bridge
+# The KV gather-scatter bridge: one machine's row of the stacked planes
 # ---------------------------------------------------------------------------
-
-_KV_DEFAULTS = kv_to_lanes(KVPair(key=0))
-
 
 class KVBridge:
-    """Authoritative KV-pair state as engine planes, with scalar views.
+    """One machine's KV-pair state: a row of the cluster's PlaneStack,
+    with scalar checkout views.
 
     Quacks like the ``Dict[int, KVPair]`` the scalar machine host code uses
     (``get`` always materializes a lane view — a fresh lane *is* a default
     ``KVPair``, so create-on-read matches ``handlers.get_kv`` exactly).
-    Checked-out views stay live and mutable until the next engine step:
-    :meth:`to_table` scatters every view back into the planes, and
-    :meth:`absorb` replaces the planes with the engine's output and drops
-    all views (they would be stale).
+    Checked-out views stay live and mutable until the next fused engine
+    step: the engine calls :meth:`flush` (scatter back) on *every* bridge
+    sharing the stack before stepping, and :meth:`drop_views` after
+    absorbing the output (the views would be stale).
 
-    Lane count grows on demand in powers of two so jit caches stay warm.
+    Lane count grows on demand in powers of two so jit caches stay warm;
+    growth is shared — all machines' rows grow together, which is exactly
+    the fused layout's point.
+
+    A bridge constructed without an explicit stack (unit tests, standalone
+    machines) owns a private single-row stack; :meth:`ClusterEngine.adopt
+    <repro.serve.paxos.cluster_engine.ClusterEngine.adopt>` migrates the
+    row into the shared stack.
     """
 
-    def __init__(self, n_keys: int = 8):
-        n = max(8, n_keys)
-        self.planes: Dict[str, np.ndarray] = {
-            f: np.full((n,), _KV_DEFAULTS[f], I32)
-            for f in vector.KVTable._fields}
+    def __init__(self, n_keys: int = 8, *, stack: Optional[PlaneStack] = None,
+                 mi: int = 0):
+        if stack is None:
+            stack = PlaneStack(vector.KVTable._fields, KV_DEFAULTS,
+                               1, max(8, n_keys))
+            mi = 0
+        self._stack = stack
+        self._mi = mi
         self._views: Dict[int, KVPair] = {}
 
     @property
+    def planes(self) -> Dict[str, np.ndarray]:
+        """Mutable host views of this machine's KV row (pulls device
+        state and marks the stack for re-upload)."""
+        return self._stack.write_views(self._mi)
+
+    @property
     def n_keys(self) -> int:
-        return int(self.planes["state"].shape[0])
+        return self._stack.n_lanes
 
     def ensure(self, key: int) -> None:
-        """Grow the planes (power-of-two) to cover ``key``."""
+        """Grow the stack's lane axis (power-of-two) to cover ``key``."""
         if key < 0:
             raise KeyError(f"negative key {key}")
         n = self.n_keys
@@ -95,10 +121,7 @@ class KVBridge:
         new_n = n
         while key >= new_n:
             new_n *= 2
-        for f in vector.KVTable._fields:
-            grown = np.full((new_n,), _KV_DEFAULTS[f], I32)
-            grown[:n] = self.planes[f]
-            self.planes[f] = grown
+        self._stack.grow(n_lanes=new_n)
 
     # -- dict-of-KVPair protocol (what handlers.get_kv / host code uses) ----
 
@@ -110,7 +133,8 @@ class KVBridge:
         kv = self._views.get(key)
         if kv is None:
             self.ensure(key)
-            kv = self._views[key] = lanes_to_kv(self.planes, key)
+            kv = self._views[key] = lanes_to_kv(
+                self._stack.read_views(self._mi), key)
         return kv
 
     def __setitem__(self, key: int, kv: KVPair) -> None:
@@ -126,38 +150,21 @@ class KVBridge:
     # -- engine boundary ------------------------------------------------------
 
     def flush(self) -> None:
-        """Scatter every checked-out view back into the planes."""
+        """Scatter every checked-out view back into the row's planes."""
+        if not self._views:
+            return
+        planes = self._stack.write_views(self._mi)
         for key, kv in self._views.items():
             for f, v in kv_to_lanes(kv).items():
-                self.planes[f][key] = v
+                planes[f][key] = v
 
-    def to_table(self) -> vector.KVTable:
-        """Flush views and hand the planes to the engine."""
-        self.flush()
-        return vector.KVTable(*[jnp.asarray(self.planes[f])
-                                for f in vector.KVTable._fields])
-
-    def absorb(self, table: vector.KVTable) -> None:
-        """Adopt the engine's output planes; all views become stale."""
+    def drop_views(self) -> None:
+        """Invalidate checkouts after the engine replaced the planes."""
         self._views.clear()
-        for f, plane in zip(vector.KVTable._fields, table):
-            self.planes[f] = np.array(plane, I32)
-
-    # -- registry mirror ------------------------------------------------------
-
-    @staticmethod
-    def registry_lanes(registry: Registry) -> jnp.ndarray:
-        """Host registry -> the per-global-session committed-counter plane."""
-        return jnp.asarray(registry.committed, jnp.int32)
-
-    @staticmethod
-    def absorb_registry(registry: Registry, lanes) -> None:
-        """Engine registrations (commit-lane scatter) -> host registry."""
-        registry.committed = [int(x) for x in np.asarray(lanes)]
 
 
 # ---------------------------------------------------------------------------
-# lid -> lane reply steering
+# lid -> (machine, lane) reply steering
 # ---------------------------------------------------------------------------
 
 class SteeringTable:
@@ -168,10 +175,16 @@ class SteeringTable:
     (current RMW round + current ABD round) purely for observability — the
     engine's lid/phase gates are what actually drop stale replies, exactly
     like the scalar tally's ``le.lid`` check.
+
+    With the fused :class:`~.cluster_engine.ClusterEngine`, a steering
+    target is a *coordinate* into the stacked planes: the table carries its
+    machine's row (``mid``) so :meth:`coords` names the exact
+    ``(machine row, lane)`` slot a reply folds into.
     """
 
-    def __init__(self, n_lanes: int):
+    def __init__(self, n_lanes: int, mid: int = 0):
         self.n_lanes = n_lanes
+        self.mid = mid
         self._live: List[List[int]] = [[0, 0] for _ in range(n_lanes)]
         self.epoch = 0
         self.stats = {"steered": 0, "dropped": 0, "stale": 0,
@@ -201,3 +214,9 @@ class SteeringTable:
         if lid not in self._live[lane]:
             self.stats["stale"] += 1     # engine lid-gates it to a no-op
         return lane
+
+    def coords(self, lid: int) -> Optional[Tuple[int, int]]:
+        """The ``(machine row, lane)`` stacked-plane coordinate for a
+        reply lid; None = drop."""
+        lane = self.lane_of(lid)
+        return None if lane is None else (self.mid, lane)

@@ -1,0 +1,555 @@
+"""ClusterEngine: one device-resident fused tick for every replica.
+
+PR 5's :class:`~.machine.BatchedMachine` batched each half of one machine's
+tick, but the cluster still paid 2·N engine dispatches per tick and
+round-tripped every plane host↔device on each one — dispatch-bound at ~2
+lanes/batch (ROADMAP open item #1, BENCH_smoke e2e lane).  This module
+restructures the serve stack around *residency*:
+
+* **Stacked planes** — all N replicas' receiver ``KVTable`` planes and
+  issuer ``ProposerTable`` lanes live in two :class:`PlaneStack`\\ s with a
+  leading machine axis: ``(18, M, K)`` KV ints and ``(65, M, S)`` proposer
+  ints.  Per-key/per-session protocol state machines are independent
+  (paper §3), and both engines are elementwise across lanes, so a flattened
+  ``(M·K,)`` step *is* N machine steps in one dispatch.
+
+* **Device residency + donation** — each stack keeps a single device array
+  across ticks; the fused step functions are jitted with
+  ``donate_argnums=(0,)`` so the engine updates state in place instead of
+  allocating a fresh cluster image per call.  Donation is safe because the
+  stack's host mirror is re-synced *only* from the freshest engine output
+  (never from a donated input buffer — see :class:`PlaneStack`), which the
+  donation-safety regression test (tests/test_cluster_engine.py) pins.
+
+* **One fused tick** — :meth:`ClusterEngine.step_all` advances every
+  machine's tick *generator* in waves: each wave executes one fused
+  receiver call and/or one fused issuer call for every machine with a
+  pending batch, then resumes the generators (in mid order) with views of
+  their row of the output planes.  Host code — KV-coupled decisions,
+  registry scatter, wire I/O — runs between waves through the unchanged
+  scalar paths.
+
+Why fused waves preserve completion-for-completion identity
+===========================================================
+
+* Rows are isolated: machine ``i``'s messages/replies land only in row
+  ``i``; a NOOP message lane (kind 0) and an idle reply lane (kind -1)
+  leave their KV/proposer lane bit-identical (the per-machine path already
+  stepped every idle lane of its own row each batch — proven a no-op by
+  the PR 5 differential gates), so stepping *all* rows per wave changes
+  nothing for non-participants.
+* Cross-machine coupling happens only through the network, and messages
+  sent in tick T are never delivered before tick T+1 — so interleaving
+  machines' within-tick segments is unobservable...
+* ...except through the network RNG, which draws per send.
+  :meth:`step_all` therefore buffers each machine's sends during the tick
+  and flushes them machine-by-machine in mid order afterwards — exactly
+  the global send sequence of the sequential loop (all of machine 0's
+  sends, then machine 1's, ...), so delays/drops/duplication replicate.
+* Registry gather/scatter moved host-side (it is the one cross-lane piece
+  of the receiver step): ``is_registered`` is computed per staged message
+  against the machine's own scalar registry — the same
+  clip-gather predicate as :func:`repro.kernels.paxos_apply.ops.gather_is_registered`
+  — and commit-lane registrations scatter back (max-merge, out-of-range
+  dropped) before any generator resumes, i.e. before anything can observe
+  the registry, exactly where the per-machine path absorbed them.
+
+Crash/restart/join evict or (re)load **one row**: :meth:`ClusterEngine.adopt`
+copies the machine's planes into its slice (volatile issuer lanes reset on
+restart, durable KV carried by the shared bridge) without dropping
+residency for the rest of the cluster — the next fused call simply
+re-uploads the patched stack once.
+"""
+
+from __future__ import annotations
+
+import functools
+import warnings
+from typing import Dict, Iterable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import proposer_vector, vector
+from repro.core.lanes import kv_to_lanes, msg_to_lanes, reply_to_lanes
+from repro.core.types import KVPair
+from repro.kernels.paxos_apply import kernel as apply_kernel
+from repro.kernels.paxos_propose import ops as propose_ops
+from repro.kernels.paxos_propose.kernel import N_PAR
+
+# CPU backends may decline a donation (the buffer is still consumed
+# semantically — we never re-read it); the warning would fire per compile.
+warnings.filterwarnings("ignore",
+                        message="Some donated buffers were not usable")
+
+I32 = np.int32
+
+N_KV = len(vector.KVTable._fields)                  # 18
+N_MSG = len(vector.MsgBatch._fields)                # 11
+N_REP = len(vector.ReplyBatch._fields)              # 11
+N_TAB = len(proposer_vector.ProposerTable._fields)  # 65
+N_IREP = len(proposer_vector.IssuerReplyBatch._fields)  # 13
+N_ACT = len(proposer_vector.ActionBatch._fields)    # 14
+
+KV_DEFAULTS = kv_to_lanes(KVPair(key=0))
+
+_MSG_IDX = {f: i for i, f in enumerate(vector.MsgBatch._fields)}
+_IREP_IDX = {f: i for i, f in enumerate(
+    proposer_vector.IssuerReplyBatch._fields)}
+
+# an unstaged message lane is a NOOP (matches vector.MsgBatch noop: kind=0,
+# has_value=1); an unstaged reply lane is idle (kind=-1: no fold/decision).
+# The message staging buffer carries the is_registered gather result as a
+# 12th plane so one device transfer ships both (N_MSGREG below).
+_NOOP_COL = np.zeros((N_MSG + 1,), I32)
+_NOOP_COL[_MSG_IDX["has_value"]] = 1
+_IDLE_COL = np.zeros((N_IREP,), I32)
+_IDLE_COL[_IREP_IDX["kind"]] = -1
+
+N_MSGREG = N_MSG + 1                    # 11 message planes + is_registered
+
+
+# ---------------------------------------------------------------------------
+# PlaneStack: a device-resident (fields, machines, lanes) int32 block
+# ---------------------------------------------------------------------------
+
+class PlaneStack:
+    """Struct-of-arrays planes for the whole cluster, resident on device.
+
+    One packed ``(F, M, L)`` int32 array holds field ``f`` of machine ``m``
+    at lane ``l``.  Two coherence flags track the host mirror against the
+    device array:
+
+    * ``host_dirty`` — host writes not yet uploaded; the next :meth:`push`
+      re-uploads the whole stack (one transfer, however many rows changed).
+    * ``dev_fresh`` — the device array holds engine output the host mirror
+      has not pulled; any host access :meth:`pull`\\ s first.
+
+    The donation contract lives here: :meth:`push` hands the device array
+    to a donated jit argument, and :meth:`absorb` immediately replaces
+    ``self.dev`` with the engine's *output*.  The donated input reference
+    is dropped in the same step, so a donated buffer is never re-read —
+    ``pull`` only ever copies from the freshest output.
+
+    Per-machine field->row view dicts are cached (rebuilt only on growth),
+    so host bridges hand out lane views without per-access dict builds.
+    """
+
+    def __init__(self, fields: Tuple[str, ...], defaults: Dict[str, int],
+                 n_machines: int, n_lanes: int):
+        self.fields = tuple(fields)
+        self._defaults = np.array([defaults[f] for f in self.fields], I32)
+        self.host = np.empty((len(self.fields), n_machines, n_lanes), I32)
+        self.host[:] = self._defaults[:, None, None]
+        self.dev: Optional[jnp.ndarray] = None
+        self.host_dirty = True
+        self.dev_fresh = False
+        self._views: List[Dict[str, np.ndarray]] = []
+        self._rebuild_views()
+
+    # -- shape ---------------------------------------------------------------
+
+    @property
+    def n_machines(self) -> int:
+        return self.host.shape[1]
+
+    @property
+    def n_lanes(self) -> int:
+        return self.host.shape[2]
+
+    def _rebuild_views(self) -> None:
+        self._views = [
+            {f: self.host[i, mi] for i, f in enumerate(self.fields)}
+            for mi in range(self.n_machines)]
+
+    def grow(self, n_machines: Optional[int] = None,
+             n_lanes: Optional[int] = None) -> None:
+        """Grow either axis; new rows/lanes start at field defaults.
+
+        Drops device residency (one re-upload on the next push) — growth
+        changes the jit shape anyway, so the compile is the real cost and
+        the callers (bridge key growth, membership joins) keep both
+        power-of-two / rare.
+        """
+        self.pull()
+        new_m = max(self.n_machines, n_machines or 0)
+        new_l = max(self.n_lanes, n_lanes or 0)
+        if (new_m, new_l) == (self.n_machines, self.n_lanes):
+            return
+        grown = np.empty((len(self.fields), new_m, new_l), I32)
+        grown[:] = self._defaults[:, None, None]
+        grown[:, :self.n_machines, :self.n_lanes] = self.host
+        self.host = grown
+        self.dev = None
+        self.host_dirty = True
+        self._rebuild_views()
+
+    # -- host <-> device coherence -------------------------------------------
+
+    def pull(self) -> None:
+        """Sync the host mirror from the latest engine output."""
+        if self.dev_fresh:
+            np.copyto(self.host, np.asarray(self.dev))
+            self.dev_fresh = False
+
+    def read_views(self, mi: int) -> Dict[str, np.ndarray]:
+        """Field -> row-``mi`` lane views, for host reads."""
+        self.pull()
+        return self._views[mi]
+
+    def write_views(self, mi: int) -> Dict[str, np.ndarray]:
+        """Like :meth:`read_views`, but marks the stack for re-upload."""
+        self.pull()
+        self.host_dirty = True
+        return self._views[mi]
+
+    def load_row(self, mi: int, src: "PlaneStack", src_mi: int) -> None:
+        """Copy machine ``src_mi``'s lanes from ``src`` into row ``mi``
+        (growing this stack's lane axis to cover them); lanes past the
+        source keep defaults.  Field layouts must match."""
+        assert src.fields == self.fields
+        if src.n_lanes > self.n_lanes:
+            self.grow(n_lanes=src.n_lanes)
+        self.pull()
+        src.pull()
+        self.host_dirty = True
+        length = src.n_lanes
+        self.host[:, mi, :length] = src.host[:, src_mi, :]
+        self.host[:, mi, length:] = self._defaults[:, None]
+
+    def push(self) -> jnp.ndarray:
+        """Upload (if stale) and hand the device stack to a fused step.
+
+        The returned array is about to be *donated*: the caller must
+        :meth:`absorb` the step's output before any further host access.
+        """
+        if self.host_dirty or self.dev is None:
+            self.dev = jnp.asarray(self.host)
+            self.host_dirty = False
+        return self.dev
+
+    def absorb(self, dev_out: jnp.ndarray) -> None:
+        """Adopt a fused step's output as the new resident state."""
+        assert not self.host_dirty, \
+            "host writes raced a fused step; push() must precede absorb()"
+        self.dev = dev_out
+        self.dev_fresh = True
+
+
+# ---------------------------------------------------------------------------
+# fused step functions (module-level: one jit cache across engines)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, donate_argnums=(0,),
+                   static_argnames=("use_kernel", "interpret", "block_rows"))
+def _fused_receiver_step(kv_stack, msgreg_stack, *, use_kernel,
+                         interpret, block_rows):
+    """One receiver step for every machine: (18,M,K),(12,M,K) ->
+    (18,M,K),(11,M,K),(M,K).  Flattens the machine axis into the lane axis
+    — apply_batch is elementwise, so rows stay isolated by construction.
+    The 12th input plane is the host-gathered is_registered bit, packed
+    with the message planes so one transfer stages the whole wave."""
+    msg_stack = msgreg_stack[:N_MSG]
+    is_reg = msgreg_stack[N_MSG]
+    m, k = is_reg.shape
+    n = m * k
+    kv = vector.KVTable(*[kv_stack[i].reshape(n) for i in range(N_KV)])
+    msg = vector.MsgBatch(*[msg_stack[i].reshape(n) for i in range(N_MSG)])
+    reg = is_reg.reshape(n) != 0
+    if use_kernel:
+        tile = block_rows * apply_kernel.LANE
+        n_pad = ((n + tile - 1) // tile) * tile
+        pad = n_pad - n
+        kv_p = vector.KVTable(*[jnp.pad(a, (0, pad)) for a in kv])
+        # padded lanes become NOOP automatically (kind=0)
+        msg_p = vector.MsgBatch(*[jnp.pad(a, (0, pad)) for a in msg])
+        new_kv, replies, mask = apply_kernel.paxos_apply(
+            kv_p, msg_p, jnp.pad(reg.astype(jnp.int32), (0, pad)),
+            block_rows=block_rows, interpret=interpret)
+        new_kv = vector.KVTable(*[a[:n] for a in new_kv])
+        replies = type(replies)(*[a[:n] for a in replies])
+        mask = mask[:n] != 0
+    else:
+        new_kv, replies, mask = vector.apply_batch(kv, msg, reg)
+    return (jnp.stack([a.reshape(m, k) for a in new_kv]),
+            jnp.stack([a.reshape(m, k) for a in replies]),
+            mask.reshape(m, k))
+
+
+@functools.partial(jax.jit, donate_argnums=(0,),
+                   static_argnames=("use_kernel", "interpret", "block_rows"))
+def _fused_issuer_step(tab_stack, rep_stack, params, *, use_kernel,
+                       interpret, block_rows):
+    """One issuer step for every machine: (65,M,S),(13,M,S),(4,M,1) ->
+    (65,M,S),(14,M,S).  Quorum parameters broadcast per machine row —
+    each machine's active view pins its own quorum sizes (§8.7)."""
+    m, s = rep_stack.shape[1], rep_stack.shape[2]
+    if use_kernel:
+        n = m * s
+        t = proposer_vector.ProposerTable(
+            *[tab_stack[i].reshape(n) for i in range(N_TAB)])
+        rep = proposer_vector.IssuerReplyBatch(
+            *[rep_stack[i].reshape(n) for i in range(N_IREP)])
+        par = jnp.broadcast_to(params, (N_PAR, m, s)).reshape(N_PAR, n)
+        new_t, act = propose_ops._issuer_step(
+            t, rep, par, block_rows=block_rows, interpret=interpret,
+            use_kernel=True)
+        return (jnp.stack([a.reshape(m, s) for a in new_t]),
+                jnp.stack([a.reshape(m, s) for a in act]))
+    t = proposer_vector.ProposerTable(*[tab_stack[i] for i in range(N_TAB)])
+    rep = proposer_vector.IssuerReplyBatch(
+        *[rep_stack[i] for i in range(N_IREP)])
+    new_t, act = proposer_vector.proposer_core(
+        t, rep, params[0], params[1], params[2], params[3])
+    return jnp.stack(new_t), jnp.stack(act)
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+class ClusterEngine:
+    """Owns the cluster's stacked planes and drives fused tick waves.
+
+    Machines talk to the engine through a tiny generator protocol: a
+    machine's ``_tick_gen()`` yields ``("recv", batch)`` /
+    ``("issuer", batch)`` requests and is resumed with row views of the
+    fused output planes.  :meth:`drive` groups concurrently-pending
+    requests of all machines into one fused call per kind per wave.
+    """
+
+    def __init__(self, cfg, n_machines: int = 1, *,
+                 use_kernel: bool = False, interpret: bool = True,
+                 block_rows: int = 32, n_keys: int = 8):
+        self.cfg = cfg
+        self.use_kernel = use_kernel
+        self.interpret = interpret
+        self.block_rows = block_rows
+        self.kv = PlaneStack(vector.KVTable._fields, KV_DEFAULTS,
+                             max(1, n_machines), max(8, n_keys))
+        self.tab = PlaneStack(proposer_vector.ProposerTable._fields,
+                              proposer_vector.TABLE_DEFAULTS,
+                              max(1, n_machines), cfg.sessions_per_machine)
+        self._machines: Dict[int, object] = {}    # mi -> BatchedMachine
+        self._bridges: Dict[int, object] = {}     # mi -> its KVBridge
+        self._msg_host: Optional[np.ndarray] = None
+        self._rep_host: Optional[np.ndarray] = None
+        self._params_key = None
+        self._params_dev: Optional[jnp.ndarray] = None
+        self.stats = {"ticks": 0,
+                      "fused_receiver_calls": 0, "fused_receiver_lanes": 0,
+                      "fused_issuer_calls": 0, "fused_issuer_lanes": 0}
+
+    # -- membership ----------------------------------------------------------
+
+    def adopt(self, m) -> None:
+        """(Re)bind machine ``m`` to row ``m.mid`` of the stacked planes.
+
+        Loads the row from the machine's current planes: a brand-new or
+        restarted machine carries default issuer lanes (volatile proposer
+        state is lost on crash — the reset *is* the eviction), while its
+        KV bridge, if it already shares this engine's stack (restart /
+        same-mid rejoin carrying the durable acceptor state), is left in
+        place untouched.  Other rows keep their residency."""
+        mi = m.mid
+        if mi >= self.kv.n_machines:
+            self.kv.grow(n_machines=mi + 1)
+            self.tab.grow(n_machines=mi + 1)
+        if m._engine is not self:
+            if m.kvs._stack is not self.kv:
+                self.kv.load_row(mi, m.kvs._stack, m.kvs._mi)
+                m.kvs._stack = self.kv
+                m.kvs._mi = mi
+            self.tab.load_row(mi, m._engine.tab, m._mi)
+            m._engine = self
+            m._mi = mi
+        self._machines[mi] = m
+        self._bridges[mi] = m.kvs
+        self._params_key = None
+
+    def _params(self) -> jnp.ndarray:
+        """(4, M, 1) per-machine quorum-parameter stack, cached until any
+        adopted machine's view-derived quorums change."""
+        m_ax = self.tab.n_machines
+        key = (m_ax,) + tuple(
+            (mi, mach.view.all_aboard_quorum(), mach.view.quorum(),
+             mach._commit_need)
+            for mi, mach in sorted(self._machines.items()))
+        if key != self._params_key:
+            p = np.ones((N_PAR, m_ax, 1), I32)
+            p[3] = self.cfg.log_too_high_threshold
+            for mi, mach in self._machines.items():
+                p[0, mi, 0] = mach.view.all_aboard_quorum()
+                p[1, mi, 0] = mach.view.quorum()
+                p[2, mi, 0] = mach._commit_need
+            self._params_dev = jnp.asarray(p)
+            self._params_key = key
+        return self._params_dev
+
+    # -- staging buffers (persistent, reset lane-by-lane) --------------------
+
+    def _msg_buffers(self) -> np.ndarray:
+        shape = (N_MSGREG, self.kv.n_machines, self.kv.n_lanes)
+        if self._msg_host is None or self._msg_host.shape != shape:
+            self._msg_host = np.empty(shape, I32)
+            self._msg_host[:] = _NOOP_COL[:, None, None]
+        return self._msg_host
+
+    def _rep_buffers(self) -> np.ndarray:
+        shape = (N_IREP, self.tab.n_machines, self.tab.n_lanes)
+        if self._rep_host is None or self._rep_host.shape != shape:
+            self._rep_host = np.empty(shape, I32)
+            self._rep_host[:] = _IDLE_COL[:, None, None]
+        return self._rep_host
+
+    # -- fused wave execution ------------------------------------------------
+
+    def _run_receiver(self, requests) -> Dict[int, Dict[str, np.ndarray]]:
+        """requests: [(machine, [Msg,...]), ...] — one fused call."""
+        # every bridge sharing the stack scatters its checked-out views
+        # first: the fused call replaces the *whole* stack
+        for br in self._bridges.values():
+            br.flush()
+        msg_host = self._msg_buffers()
+        fields = vector.MsgBatch._fields
+        cols: List[List[int]] = []
+        s_mi: List[int] = []
+        s_key: List[int] = []
+        for mach, batch in requests:
+            mi = mach._mi
+            committed = mach.registry.committed
+            last = len(committed) - 1
+            for msg in batch:
+                vals = msg_to_lanes(msg)
+                # host mirror of ops.gather_is_registered (clip + compare):
+                # packed as the 12th staging plane
+                rid = msg.rmw_id
+                gs = rid.gsess
+                cols.append([vals[f] for f in fields] + [
+                    1 if (gs >= 0 and committed[min(gs, last)] >= rid.counter)
+                    else 0])
+                s_mi.append(mi)
+                s_key.append(msg.key)
+        # one vectorized scatter for the whole wave (per-item fancy writes
+        # were the staging hotspot)
+        msg_host[:, s_mi, s_key] = np.array(cols, I32).T
+        out_kv, out_rep, out_mask = _fused_receiver_step(
+            self.kv.push(), jnp.asarray(msg_host),
+            use_kernel=self.use_kernel, interpret=self.interpret,
+            block_rows=self.block_rows)
+        self.kv.absorb(out_kv)
+        for br in self._bridges.values():
+            br.drop_views()              # stale against the new stack
+        rep_np = np.asarray(out_rep)
+        mask_np = np.asarray(out_mask)
+        results: Dict[int, Dict[str, np.ndarray]] = {}
+        self.stats["fused_receiver_calls"] += 1
+        for mach, batch in requests:
+            mi = mach._mi
+            committed = mach.registry.committed
+            for msg in batch:
+                # host mirror of ops.scatter_register (max, OOB dropped)
+                if mask_np[mi, msg.key]:
+                    gs = msg.rmw_id.gsess
+                    if 0 <= gs < len(committed) \
+                            and msg.rmw_id.counter > committed[gs]:
+                        committed[gs] = msg.rmw_id.counter
+            self.stats["fused_receiver_lanes"] += len(batch)
+            results[id(mach)] = {f: rep_np[i, mi] for i, f
+                                 in enumerate(vector.ReplyBatch._fields)}
+        # reset to NOOP for the next wave
+        msg_host[:, s_mi, s_key] = _NOOP_COL[:, None]
+        return results
+
+    def _run_issuer(self, requests) -> Dict[int, Dict[str, np.ndarray]]:
+        """requests: [(machine, [(lane, Reply),...]), ...] — one call."""
+        rep_host = self._rep_buffers()
+        fields = proposer_vector.IssuerReplyBatch._fields
+        cols: List[List[int]] = []
+        s_mi: List[int] = []
+        s_lane: List[int] = []
+        for mach, batch in requests:
+            mi = mach._mi
+            for lane, rep in batch:
+                vals = reply_to_lanes(rep)
+                cols.append([vals[f] for f in fields])
+                s_mi.append(mi)
+                s_lane.append(lane)
+        rep_host[:, s_mi, s_lane] = np.array(cols, I32).T
+        out_tab, out_act = _fused_issuer_step(
+            self.tab.push(), jnp.asarray(rep_host), self._params(),
+            use_kernel=self.use_kernel, interpret=self.interpret,
+            block_rows=self.block_rows)
+        self.tab.absorb(out_tab)
+        act_np = np.asarray(out_act)
+        results: Dict[int, Dict[str, np.ndarray]] = {}
+        self.stats["fused_issuer_calls"] += 1
+        for mach, batch in requests:
+            self.stats["fused_issuer_lanes"] += len(batch)
+            results[id(mach)] = {
+                f: act_np[i, mach._mi] for i, f
+                in enumerate(proposer_vector.ActionBatch._fields)}
+        # reset to idle for the next wave
+        rep_host[:, s_mi, s_lane] = _IDLE_COL[:, None]
+        return results
+
+    def drive(self, pairs: Iterable[Tuple[object, object]]) -> None:
+        """Advance (machine, tick-generator) pairs to completion in waves.
+
+        Each wave collects every pending request, executes at most one
+        fused receiver call and one fused issuer call, and resumes the
+        generators in the order given (mid order — matching the sequential
+        loop's per-machine ordering of host actions)."""
+        pending = []
+        for mach, gen in pairs:
+            try:
+                req = next(gen)
+            except StopIteration:
+                continue
+            pending.append((mach, gen, req))
+        while pending:
+            recv = [(m, r[1]) for m, _g, r in pending if r[0] == "recv"]
+            iss = [(m, r[1]) for m, _g, r in pending if r[0] == "issuer"]
+            results: Dict[int, object] = {}
+            if recv:
+                results.update(self._run_receiver(recv))
+            if iss:
+                results.update(self._run_issuer(iss))
+            nxt = []
+            for mach, gen, _req in pending:
+                try:
+                    req = gen.send(results[id(mach)])
+                except StopIteration:
+                    continue
+                nxt.append((mach, gen, req))
+            pending = nxt
+
+    # -- the cluster tick ----------------------------------------------------
+
+    def step_all(self, machines, net_send) -> None:
+        """One fused tick for the whole cluster.
+
+        Sends are buffered per machine during the waves and flushed in mid
+        order afterwards, reproducing the sequential loop's global send
+        sequence exactly (the network draws RNG per send)."""
+        self.stats["ticks"] += 1
+        for mach in machines:
+            if mach._engine is not self:
+                self.adopt(mach)
+        buffers: List[List[Tuple[int, int, object]]] = []
+        saved = []
+        try:
+            for mach in machines:
+                buf: List[Tuple[int, int, object]] = []
+                buffers.append(buf)
+                saved.append(mach._send)
+                mach._send = (lambda src, dst, payload, _b=buf:
+                              _b.append((src, dst, payload)))
+            self.drive([(mach, mach._tick_gen()) for mach in machines])
+        finally:
+            for mach, fn in zip(machines, saved):
+                mach._send = fn
+        for buf in buffers:
+            for src, dst, payload in buf:
+                net_send(src, dst, payload)

@@ -1,24 +1,35 @@
-"""BatchedMachine: a replica whose tick is two SIMD engine steps.
+"""BatchedMachine: a replica whose tick is a stream of fused engine waves.
 
 Drop-in replacement for the scalar :class:`repro.core.node.Machine`
 (``submit`` / ``deliver`` / ``step`` / ``crash``, stats, trace taps,
-``Cluster(machine_cls=BatchedMachine)``), but per tick the protocol hot
-paths run batched:
+``Cluster(machine_cls=BatchedMachine)``), but the protocol hot paths run
+batched on the cluster's device-resident plane stacks
+(:mod:`.cluster_engine`):
 
-* every inbound wire **message** is applied by the receiver engine —
-  :func:`repro.kernels.paxos_apply.ops.replica_step` over the
-  :class:`~.bridge.KVBridge` planes (one lane per key), replies coming back
-  as :class:`~repro.core.vector.ReplyBatch` lanes;
-* every steered **reply** is folded and arbitrated by the issuer engine —
-  :func:`repro.core.proposer_vector.proposer_step` over the ProposerTable
-  planes (one lane per session), decisions coming back as
-  :class:`~repro.core.proposer_vector.ActionBatch` lanes.
+* every inbound wire **message** is applied by the fused receiver step over
+  this machine's row of the stacked :class:`~repro.core.vector.KVTable`
+  planes (one lane per key), replies coming back as
+  :class:`~repro.core.vector.ReplyBatch` row views;
+* every steered **reply** is folded and arbitrated by the fused issuer step
+  over this machine's row of the stacked ProposerTable (one lane per
+  session), decisions coming back as
+  :class:`~repro.core.proposer_vector.ActionBatch` row views — through the
+  jnp oracle or the ``paxos_propose`` Pallas kernel (the same
+  ``use_kernel`` switch the receiver has).
+
+The machine no longer calls an engine directly: its tick is the generator
+:meth:`_tick_gen`, which *yields* batch requests and is resumed with the
+fused outputs.  Driven standalone (:meth:`step`) the behavior is exactly
+PR 5's two-engine tick; driven by :meth:`ClusterEngine.step_all
+<repro.serve.paxos.cluster_engine.ClusterEngine.step_all>` the same
+generator interleaves with every other machine's, one fused receiver call
+plus one fused issuer call per wave for the whole cluster.
 
 Host decisions (KV-coupled: grabbing the pair, accept-value computation,
 local commits, back-off/retry/inspection timers, FIFO probing) reuse the
 scalar machine's code verbatim, resolved through the bridge: they check out
-scalar ``KVPair`` views of single lanes and the bridge scatters the
-mutations back before the next engine step.  See the package docstring
+scalar ``KVPair`` views of single lanes and the bridge scatters them back
+before the next engine step.  See the package docstring
 (:mod:`repro.serve.paxos`) for the full tick anatomy and the equivalence
 argument.
 
@@ -35,10 +46,8 @@ import dataclasses
 from collections import deque
 from typing import Deque, Dict, List, Optional, Tuple
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import proposer_vector
 from repro.core.handlers import get_kv
 from repro.core.lanes import _COMMIT_KINDS
 from repro.core.node import Machine, ProtocolConfig, ReqKind
@@ -48,15 +57,14 @@ from repro.core.proposer import (
 from repro.core.types import (
     Carstamp, HelpFlag, Msg, MsgKind, Reply, RmwId, TS, Tally, View,
 )
-from repro.core.vector import MsgBatch, ReplyBatch
-from repro.kernels.paxos_apply import ops
 
 from . import bridge
-from .scheduler import IngestScheduler
+from .cluster_engine import ClusterEngine
+from .scheduler import DEFAULT_BATCH_TARGET, IngestScheduler
 
 
 class BatchedMachine(Machine):
-    """One simulated server, stepping as two SIMD calls per tick."""
+    """One simulated server, ticking as fused-engine waves."""
 
     # round events feed the live issuer lanes, trace tap or not
     _wants_round_events = True
@@ -64,31 +72,69 @@ class BatchedMachine(Machine):
     def __init__(self, mid: int, cfg: ProtocolConfig, send, now,
                  incarnation: int = 0, view: Optional[View] = None, *,
                  use_kernel: bool = False, interpret: bool = True,
-                 block_rows: int = 32, batch_target: Optional[int] = None):
+                 block_rows: int = 32, batch_target: Optional[int] = None,
+                 engine: Optional[ClusterEngine] = None):
         super().__init__(mid, cfg, send, now, incarnation, view=view)
-        # authoritative receiver state = engine planes behind the bridge
-        self.kvs = bridge.KVBridge()
-        # authoritative issuer state = ProposerTable planes (numpy, host
-        # mutable for round loads; jnp at engine boundaries)
-        self.lanes: Dict[str, np.ndarray] = {
-            f: np.full((cfg.sessions_per_machine,), v, np.int32)
-            for f, v in proposer_vector.TABLE_DEFAULTS.items()}
-        self.steering = bridge.SteeringTable(cfg.sessions_per_machine)
+        self.use_kernel = use_kernel
+        self.interpret = interpret
+        self.block_rows = block_rows
+        self.batch_target = (DEFAULT_BATCH_TARGET if batch_target is None
+                             else batch_target)
+        # Engine binding: row `mid` of the (shared or private) plane
+        # stacks.  A standalone machine owns a private engine; Cluster
+        # adoption (ClusterEngine.adopt) migrates the rows into the shared
+        # stacks without touching this machine's code.
+        if engine is None:
+            engine = ClusterEngine(cfg, mid + 1, use_kernel=use_kernel,
+                                   interpret=interpret,
+                                   block_rows=block_rows)
+        self._engine = engine
+        self._mi = mid
+        # authoritative receiver state = this machine's row of the stacked
+        # KV planes, checked out through the bridge
+        self.kvs = bridge.KVBridge(stack=engine.kv, mi=self._mi)
+        self.steering = bridge.SteeringTable(cfg.sessions_per_machine, mid)
+        engine.adopt(self)
         # message ingest: strict order keeps the batched execution
         # oracle-exact (see scheduler docstring); one persistent instance
         # per machine so its stats survive as serve-path observability
         self.ingest = IngestScheduler(strict_order=True,
-                                      batch_target=batch_target)
+                                      batch_target=self.batch_target)
         # local synthetic replies (§4.6 implicit acks, §5/§8.4 self-notes)
         # queued for the next issuer step — always the first fold of a fresh
         # round, so with majority >= 2 they can never decide alone
         self._notes: Deque[Tuple[int, Reply]] = deque()
-        self.use_kernel = use_kernel
-        self.interpret = interpret
-        self.block_rows = block_rows
-        self.batch_target = batch_target
         self.engine_stats = {"receiver_batches": 0, "receiver_lanes": 0,
                              "issuer_batches": 0, "issuer_lanes": 0}
+
+    @classmethod
+    def attach_engine(cls, machines) -> ClusterEngine:
+        """Build one shared :class:`ClusterEngine` for a whole cluster and
+        adopt every machine's rows into its stacked planes.  ``sim.Cluster``
+        duck-types on this hook: when the machine class provides it, the
+        cluster tick becomes one fused ``step_all`` instead of N
+        sequential ``step()`` calls."""
+        first = machines[0]
+        eng = ClusterEngine(first.cfg, len(machines),
+                            use_kernel=first.use_kernel,
+                            interpret=first.interpret,
+                            block_rows=first.block_rows)
+        for m in machines:
+            eng.adopt(m)
+        return eng
+
+    @property
+    def lanes(self) -> Dict[str, np.ndarray]:
+        """This machine's row of the stacked ProposerTable: field ->
+        mutable per-session lane views (host writes re-upload lazily)."""
+        return self._engine.tab.write_views(self._mi)
+
+    @property
+    def lanes_ro(self) -> Dict[str, np.ndarray]:
+        """Read-only lane views: same rows, but does *not* mark the stack
+        for re-upload — pure-read decision loaders must not force the
+        engine to re-ship an unchanged ProposerTable stack next wave."""
+        return self._engine.tab.read_views(self._mi)
 
     @property
     def _commit_need(self) -> int:
@@ -98,7 +144,7 @@ class BatchedMachine(Machine):
                 if self.cfg.commit_ack_quorum_is_majority else 1)
 
     # =================================================================
-    # worker loop: batched inbox processing
+    # worker loop: the tick generator (driven solo or cluster-fused)
     # =================================================================
 
     # control-plane kinds are host-intercepted before the engines
@@ -119,6 +165,12 @@ class BatchedMachine(Machine):
         return payload.epoch != self.view.epoch
 
     def step(self) -> None:
+        """Standalone tick: drive this machine's generator alone (one
+        fused call per batch — PR 5 semantics).  Under a Cluster the
+        engine drives every machine's generator together instead."""
+        self._engine.drive([(self, self._tick_gen())])
+
+    def _tick_gen(self):
         if not self.alive:
             return
         if self.retired:
@@ -138,16 +190,6 @@ class BatchedMachine(Machine):
         # free under the conflict rules.
         run_msgs: List[Msg] = []
         run_reps: List[Reply] = []
-
-        def flush_runs() -> None:
-            nonlocal run_msgs, run_reps
-            if run_reps:
-                self._issuer_flush(run_reps)
-                run_reps = []
-            if run_msgs:
-                self._receiver_flush(run_msgs, out_replies)
-                run_msgs = []
-
         while self.inbox:
             payload = self.inbox.popleft()
             if self._fenced_or_control(payload):
@@ -155,20 +197,28 @@ class BatchedMachine(Machine):
                 # current when a snapshot is served or a view installs
                 # (runs never span an install boundary, which is what
                 # keeps reply-epoch stamping at flush time scalar-exact)
-                flush_runs()
+                if run_reps:
+                    yield from self._issuer_flush(run_reps)
+                    run_reps = []
+                if run_msgs:
+                    yield from self._receiver_flush(run_msgs, out_replies)
+                    run_msgs = []
                 self._admit(payload)
                 continue
             if isinstance(payload, Msg):
                 if run_reps:
-                    self._issuer_flush(run_reps)
+                    yield from self._issuer_flush(run_reps)
                     run_reps = []
                 run_msgs.append(payload)
             else:
                 if run_msgs:
-                    self._receiver_flush(run_msgs, out_replies)
+                    yield from self._receiver_flush(run_msgs, out_replies)
                     run_msgs = []
                 run_reps.append(payload)
-        flush_runs()
+        if run_reps:
+            yield from self._issuer_flush(run_reps)
+        if run_msgs:
+            yield from self._receiver_flush(run_msgs, out_replies)
         # receiver replies go out after the whole inbox, in arrival order —
         # same send sequence as the scalar worker loop (§3.1.3 step 3)
         for dst, rep in out_replies:
@@ -185,15 +235,15 @@ class BatchedMachine(Machine):
         if self._notes:
             # fold round-start self-notes from inspection/probe now, so the
             # tally state entering the next tick matches the scalar machine
-            self._issuer_flush([])
+            yield from self._issuer_flush([])
         self._poll_config_register()
 
     # =================================================================
-    # receiver half: one vector step per conflict-free batch
+    # receiver half: one fused-step request per conflict-free batch
     # =================================================================
 
     def _receiver_flush(self, run: List[Msg],
-                        out: List[Tuple[int, Reply]]) -> None:
+                        out: List[Tuple[int, Reply]]):
         for msg in run:
             self.last_heard[msg.src] = self._now()
             self.bump(f"recv_{msg.kind.name.lower()}")
@@ -202,47 +252,29 @@ class BatchedMachine(Machine):
             self.kvs.ensure(msg.key)
             self.ingest.offer(msg)
         for batch in self.ingest.drain():
-            self._receiver_batch(batch, out)
-
-    def _receiver_batch(self, batch: List[Msg],
-                        out: List[Tuple[int, Reply]]) -> None:
-        n = self.kvs.n_keys
-        planes = {f: np.zeros((n,), np.int32) for f in MsgBatch._fields}
-        planes["has_value"][:] = 1                 # matches MsgBatch.noop
-        for msg in batch:
-            for f, v in bridge.msg_to_lanes(msg).items():
-                planes[f][msg.key] = v
-        msgb = MsgBatch(*[jnp.asarray(planes[f]) for f in MsgBatch._fields])
-        table, replies, registered = ops.replica_step(
-            self.kvs.to_table(), msgb,
-            bridge.KVBridge.registry_lanes(self.registry),
-            block_rows=self.block_rows, interpret=self.interpret,
-            use_kernel=self.use_kernel)
-        self.kvs.absorb(table)
-        bridge.KVBridge.absorb_registry(self.registry, registered)
-        rep_np = {f: np.asarray(p)
-                  for f, p in zip(ReplyBatch._fields, replies)}
-        for msg in batch:
-            rep = bridge.reply_from_lanes(rep_np, msg, src=self.mid)
-            # runs never span a view install (step flushes before any
-            # control-plane intercept), so stamping at flush time matches
-            # the scalar machine's at-handling-time epoch
-            rep.epoch = self.view.epoch
-            if msg.kind in _COMMIT_KINDS:
-                self._record_commit(msg.key, msg.log_no, msg.rmw_id,
-                                    msg.value, msg.base_ts,
-                                    get_kv(self.kvs, msg.key),
-                                    val_log=msg.val_log)
-            self.bump(f"rep_{rep.opcode.name.lower()}")
-            out.append((msg.src, rep))
-        self.engine_stats["receiver_batches"] += 1
-        self.engine_stats["receiver_lanes"] += len(batch)
+            # rep_np: field -> this machine's per-key reply row views
+            rep_np = yield ("recv", batch)
+            for msg in batch:
+                rep = bridge.reply_from_lanes(rep_np, msg, src=self.mid)
+                # runs never span a view install (the tick flushes before
+                # any control-plane intercept), so stamping at flush time
+                # matches the scalar machine's at-handling-time epoch
+                rep.epoch = self.view.epoch
+                if msg.kind in _COMMIT_KINDS:
+                    self._record_commit(msg.key, msg.log_no, msg.rmw_id,
+                                        msg.value, msg.base_ts,
+                                        get_kv(self.kvs, msg.key),
+                                        val_log=msg.val_log)
+                self.bump(f"rep_{rep.opcode.name.lower()}")
+                out.append((msg.src, rep))
+            self.engine_stats["receiver_batches"] += 1
+            self.engine_stats["receiver_lanes"] += len(batch)
 
     # =================================================================
-    # issuer half: one proposer step per conflict-free reply batch
+    # issuer half: one fused-step request per conflict-free reply batch
     # =================================================================
 
-    def _issuer_flush(self, run: List[Reply]) -> None:
+    def _issuer_flush(self, run: List[Reply]):
         for rep in run:
             self.last_heard[rep.src] = self._now()
         stream = deque(run)
@@ -273,31 +305,14 @@ class BatchedMachine(Machine):
             if batch:
                 # notes were already traced at _note_local time (mirroring
                 # the scalar machine, which traces before folding)
-                self._issuer_batch(batch, trace_replies=not is_notes)
+                yield from self._issuer_batch(batch,
+                                              trace_replies=not is_notes)
 
     def _issuer_batch(self, batch: List[Tuple[int, Reply]],
-                      trace_replies: bool = True) -> None:
-        n_sess = self.cfg.sessions_per_machine
-        repb = {f: np.zeros((n_sess,), np.int32)
-                for f in proposer_vector.IssuerReplyBatch._fields}
-        repb["kind"] -= 1                          # idle lanes
-        for lane, rep in batch:
-            for f, v in bridge.reply_to_lanes(rep).items():
-                repb[f][lane] = v
-        table = proposer_vector.ProposerTable(
-            *[jnp.asarray(self.lanes[f])
-              for f in proposer_vector.ProposerTable._fields])
-        batchv = proposer_vector.IssuerReplyBatch(
-            *[jnp.asarray(repb[f])
-              for f in proposer_vector.IssuerReplyBatch._fields])
-        table, actions = proposer_vector.proposer_step(
-            table, batchv, n_machines=self.view.all_aboard_quorum(),
-            majority=self.view.quorum(), commit_need=self._commit_need,
-            log_too_high_threshold=self.cfg.log_too_high_threshold)
-        for f, plane in zip(proposer_vector.ProposerTable._fields, table):
-            self.lanes[f] = np.array(plane, np.int32)
-        act = {f: np.asarray(p)
-               for f, p in zip(proposer_vector.ActionBatch._fields, actions)}
+                      trace_replies: bool = True):
+        # act: field -> this machine's per-session ActionBatch row views;
+        # the fused step already absorbed the new ProposerTable row
+        act = yield ("issuer", batch)
         self.engine_stats["issuer_batches"] += 1
         self.engine_stats["issuer_lanes"] += len(batch)
         # Trace + dispatch per lane, in arrival order.  The reply trace and
@@ -393,23 +408,25 @@ class BatchedMachine(Machine):
     def _load_fresh_tally(self, le, sess: int) -> None:
         """§10.3: LOCAL_ACCEPT's accept-value computation needs the
         freshest Ack-base-TS-stale payload — it lives in the fr_* planes."""
+        lanes = self.lanes_ro
         t = Tally()
-        if int(self.lanes["fr_has"][sess]):
-            t.fresh_value = int(self.lanes["fr_val"][sess])
-            t.fresh_cs = Carstamp(TS(int(self.lanes["fr_base_v"][sess]),
-                                     int(self.lanes["fr_base_m"][sess])),
-                                  int(self.lanes["fr_log"][sess]))
+        if int(lanes["fr_has"][sess]):
+            t.fresh_value = int(lanes["fr_val"][sess])
+            t.fresh_cs = Carstamp(TS(int(lanes["fr_base_v"][sess]),
+                                     int(lanes["fr_base_m"][sess])),
+                                  int(lanes["fr_log"][sess]))
         le.tally = t
 
     def _load_best(self, ab, sess: int) -> None:
         """§11: ABD_R_DONE completes with the best-carstamp fold state."""
-        ab.best_value = int(self.lanes["best_val"][sess])
-        ab.best_cs = Carstamp(TS(int(self.lanes["best_base_v"][sess]),
-                                 int(self.lanes["best_base_m"][sess])),
-                              int(self.lanes["best_vlog"][sess]))
-        ab.best_log_no = int(self.lanes["best_log"][sess])
-        ab.best_rmw_id = RmwId(int(self.lanes["best_cnt"][sess]),
-                               int(self.lanes["best_sess"][sess]))
+        lanes = self.lanes_ro
+        ab.best_value = int(lanes["best_val"][sess])
+        ab.best_cs = Carstamp(TS(int(lanes["best_base_v"][sess]),
+                                 int(lanes["best_base_m"][sess])),
+                              int(lanes["best_vlog"][sess]))
+        ab.best_log_no = int(lanes["best_log"][sess])
+        ab.best_rmw_id = RmwId(int(lanes["best_cnt"][sess]),
+                               int(lanes["best_sess"][sess]))
 
     # =================================================================
     # issuer-lane maintenance hooks (round loads, pauses, local notes)

@@ -52,6 +52,16 @@ from repro.core.types import Msg
 # queueing / aging / emission policy on top.
 from repro.core.lanes import _ConflictState, bucket_conflict_free  # noqa: F401
 
+# Engine lane budget for one emitted batch.  PR 5 shipped with no target
+# (None = batch until conflict) and the serve path still averaged ~2
+# lanes/batch — the limiter was per-machine dispatch, not this cap.  The
+# fused ClusterEngine multiplies occupancy by stacking every machine's
+# batch into one call, so the per-machine target is now an explicit lane
+# budget, raised high enough (one full kernel tile) that no realistic
+# conflict-free run is ever split by the cap — BatchedMachine uses it as
+# its default.
+DEFAULT_BATCH_TARGET = 128
+
 
 class IngestScheduler:
     """Per-key FIFO ingest queues with conflict-free batch emission.

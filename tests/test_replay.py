@@ -83,6 +83,48 @@ def test_replay_with_crash_and_restart():
 
 
 # ---------------------------------------------------------------------------
+# fused (stacked-machine) replay: cluster ticks, plane-for-plane
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", (1, 4, 8, 13))
+def test_fused_replay_jnp(seed):
+    """All machines share each fused (M*K,) step — the ClusterEngine
+    flattening convention — yet every row stays bit-identical to its own
+    scalar shadow, wave for wave."""
+    stats = replay.run_and_replay_fused(seed, n_ops=24, keys=3,
+                                        use_kernel=False)
+    assert stats["machines"] == 5
+    assert stats["messages"] > 0
+    assert stats["fused_waves"] > 0
+    assert stats["history"] == 24
+
+
+def test_fused_replay_kernel():
+    """Same through the Pallas kernel (interpret mode): the machine axis
+    folded into the lane axis pads to the block tile and back."""
+    stats = replay.run_and_replay_fused(3, use_kernel=True, interpret=True,
+                                        block_rows=1)
+    assert stats["machines"] == 5
+    assert stats["fused_waves"] > 0
+
+
+def test_fused_replay_with_crash_and_restart():
+    """Row isolation under uneven traces: a crashed machine's trace simply
+    ends, so its row rides later waves as all-NOOP lanes."""
+    cfg = ProtocolConfig(n_machines=5, sessions_per_machine=2)
+    cl = Cluster(cfg, NetConfig(seed=9, drop_prob=0.04))
+    cl.enable_msg_trace()
+    workload(cl, n_ops=20, keys=2, seed=9, rmw_frac=0.5, write_frac=0.25)
+    cl.step(8)
+    cl.crash(4)
+    cl.step(6)
+    cl.restart(4)
+    assert cl.run_until_quiet(max_ticks=120_000)
+    stats = replay.replay_cluster_fused(cl, n_keys=2, use_kernel=False)
+    assert stats["machines"] == 5
+
+
+# ---------------------------------------------------------------------------
 # differential proposer replay (scalar Machine vs proposer_step)
 # ---------------------------------------------------------------------------
 
