@@ -253,7 +253,8 @@ def bench_issuer(n_lanes: int, iters: int = 30, n_machines: int = 5,
 
 def bench_e2e(n_ops: int = 300, keys: int = 32, seed: int = 5,
               sessions: int = 16, rmw_frac: float = 0.4,
-              write_frac: float = 0.3, warmup: bool = True):
+              write_frac: float = 0.3, warmup: bool = True,
+              shards: int = 1):
     """End-to-end client ops/s: scalar vs batched cluster (serve path).
 
     Unlike the lane microbenches above, this drives whole client ops
@@ -271,13 +272,23 @@ def bench_e2e(n_ops: int = 300, keys: int = 32, seed: int = 5,
     A warm-up pass at the same plane shapes runs (and is discarded) first
     so XLA compile time doesn't land in the timed region — the trajectory
     tracks steady-state serve throughput, not compile latency.
+
+    ``shards > 1`` runs the batched cluster with a sharded state plane
+    (per-shard kernel segments, lane blocks placed across the visible
+    devices) and reports per-shard occupancy lanes next to the fused
+    totals — the tracked numbers for the sharded layout.
     """
+    import functools
+
     from repro.core import checkers
     from repro.core.node import Machine, ProtocolConfig
     from repro.core.sim import (
         Cluster, NetConfig, completion_tuples, workload,
     )
     from repro.serve.paxos import BatchedMachine
+
+    batched_cls = (functools.partial(BatchedMachine, shards=shards)
+                   if shards > 1 else BatchedMachine)
 
     def make(mcls, ops):
         cl = Cluster(ProtocolConfig(n_machines=5,
@@ -289,10 +300,10 @@ def bench_e2e(n_ops: int = 300, keys: int = 32, seed: int = 5,
         return cl
 
     if warmup:   # compile both fused graphs at the measured plane shapes
-        make(BatchedMachine, 10).run_until_quiet(max_ticks=200_000)
+        make(batched_cls, 10).run_until_quiet(max_ticks=200_000)
 
     rows, ref = [], None
-    for impl, mcls in (("scalar", Machine), ("batched", BatchedMachine)):
+    for impl, mcls in (("scalar", Machine), ("batched", batched_cls)):
         cl = make(mcls, n_ops)
         t0 = time.time()
         # correctness gates raise (not assert): this feeds the CI
@@ -309,7 +320,7 @@ def bench_e2e(n_ops: int = 300, keys: int = 32, seed: int = 5,
         row = {"impl": impl, "completed": len(cl.history),
                "client_ops_per_s": round(len(cl.history) / dt),
                "wall_s": round(dt, 3), "ticks": cl.rounds}
-        if mcls is BatchedMachine:
+        if impl == "batched":
             eng = cl.engine.stats
             n_calls = (eng["fused_receiver_calls"]
                        + eng["fused_issuer_calls"])
@@ -326,10 +337,24 @@ def bench_e2e(n_ops: int = 300, keys: int = 32, seed: int = 5,
             row["vs_scalar"] = round(
                 row["client_ops_per_s"]
                 / max(rows[0]["client_ops_per_s"], 1), 3)
+            if shards > 1:
+                # per-shard occupancy: how the fused calls' staged lanes
+                # and scattered registrations spread over the shard rows
+                row["shards"] = eng["shards"]
+                row["receiver_shard_lanes"] = list(
+                    eng["receiver_shard_lanes"])
+                row["issuer_shard_lanes"] = list(eng["issuer_shard_lanes"])
+                row["shard_registrations"] = list(
+                    eng["shard_registrations"])
             agg = {}
             for m in cl.machines:
                 for k, v in m.engine_stats.items():
-                    agg[k] = agg.get(k, 0) + v
+                    if isinstance(v, list):
+                        tot = agg.setdefault(k, [0] * len(v))
+                        for i, x in enumerate(v):
+                            tot[i] += x
+                    else:
+                        agg[k] = agg.get(k, 0) + v
             row["receiver_lanes_per_batch"] = round(
                 agg["receiver_lanes"] / max(agg["receiver_batches"], 1), 2)
             row["issuer_lanes_per_batch"] = round(
@@ -456,6 +481,13 @@ def main(argv=None):
                              "this *tracked* file (perf history survives in "
                              "git, not just as an ephemeral CI artifact); "
                              "pass '' to disable")
+    parser.add_argument("--shards", type=int, default=1, metavar="N",
+                        help="with --smoke: also run the e2e lane at N "
+                             "state-plane shards and record it (plus "
+                             "per-shard occupancy) as 'e2e_sharded' — run "
+                             "under XLA_FLAGS=--xla_force_host_platform_"
+                             "device_count=N to spread the shard rows "
+                             "over N devices")
     args = parser.parse_args(argv)
 
     if args.smoke:
@@ -476,6 +508,8 @@ def main(argv=None):
             "e2e": bench_e2e(),
             "reconfig": bench_reconfig(),
         }
+        if args.shards > 1:
+            rows["e2e_sharded"] = bench_e2e(shards=args.shards)
         out = args.json or "BENCH_smoke.json"
         with open(out, "w") as fh:
             json.dump(rows, fh, indent=1)

@@ -19,6 +19,7 @@ Wired into scripts/check.sh after the SIMD smoke; see
 
 from __future__ import annotations
 
+import argparse
 import functools
 import sys
 import time
@@ -37,11 +38,12 @@ CRASH_SEEDS = frozenset((2, 5, 9, 13, 17))
 KERNEL_SEEDS = frozenset((0, 3, 5, 8, 12, 16, 19))
 
 
-def batched_cls(seed: int):
+def batched_cls(seed: int, shards: int = 1):
+    kw = {"shards": shards} if shards > 1 else {}
     if seed in KERNEL_SEEDS:
         return functools.partial(BatchedMachine, use_kernel=True,
-                                 block_rows=1)
-    return BatchedMachine
+                                 block_rows=1, **kw)
+    return functools.partial(BatchedMachine, **kw) if kw else BatchedMachine
 
 
 def run(machine_cls, seed: int):
@@ -64,12 +66,19 @@ def run(machine_cls, seed: int):
     return cl
 
 
-def main() -> int:
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--shards", type=int, default=1,
+                    help="state-plane shard count for the batched cluster "
+                         "(>1 exercises the sharded lane layout; with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count"
+                         "=N the shard rows land on N devices)")
+    args = ap.parse_args(argv)
     t0 = time.time()
     total_ops = 0
     for seed in SEEDS:
         scalar = run(Machine, seed)
-        batched = run(batched_cls(seed), seed)
+        batched = run(batched_cls(seed, args.shards), seed)
         want, got = completion_tuples(scalar), completion_tuples(batched)
         if want != got:
             print(f"seed {seed}: batched completions diverged "
@@ -87,9 +96,10 @@ def main() -> int:
         impl = "pallas" if seed in KERNEL_SEEDS else "jnp"
         print(f"seed {seed:2d} [{mode:6s}/{impl:6s}]: {len(got):2d} "
               f"completions identical, checkers green")
+    sharded = f", {args.shards} shards" if args.shards > 1 else ""
     print(f"batched smoke OK: {len(list(SEEDS))} seeds, {total_ops} client "
-          f"ops, completion-identical to scalar, linearizability green "
-          f"({time.time() - t0:.1f}s)")
+          f"ops{sharded}, completion-identical to scalar, linearizability "
+          f"green ({time.time() - t0:.1f}s)")
     return 0
 
 

@@ -13,12 +13,21 @@ Rules:
   history whose entries predate the fused-engine e2e schema (no ratio
   derivable) exits 0 with a note — the guard gates *regressions*, it
   does not invent a standard.
-* The baseline is the **last** trajectory entry with a derivable ratio:
-  the trajectory is append-only and ordered, so the last entry is the
-  ratio the previous commit shipped with.
+* The baseline is the **last comparable** trajectory entry with a
+  derivable ratio: the trajectory is append-only and ordered, so that is
+  the ratio the previous commit on this host class shipped with.
+* **Comparable = same host metadata.**  Rows are stamped with
+  ``python`` / ``platform`` / ``cpu_count`` provenance
+  (``bench_vector._run_metadata``); only rows whose stamps match the
+  current host are eligible as baseline.  The ratio normalizes away raw
+  host speed, but not host *shape* — a 4-core CI runner and a 64-core
+  dev box amortize dispatch overhead differently, so their ratios are
+  different quantities and gating one against the other fires (or
+  masks) regressions spuriously.  Legacy rows without stamps are never
+  comparable.  ``--any-host`` restores the old behavior.
 * Ratios (batched / scalar ops/s) are compared rather than absolute
-  ops/s so the guard is stable across differently-sized CI hosts — the
-  scalar cluster on the same box is the control.
+  ops/s so the guard is stable across same-shaped hosts of different
+  speeds — the scalar cluster on the same box is the control.
 """
 
 from __future__ import annotations
@@ -26,6 +35,21 @@ from __future__ import annotations
 import argparse
 import json
 import sys
+
+HOST_KEYS = ("python", "platform", "cpu_count")
+
+
+def host_metadata() -> dict:
+    """The current host's stamp, matching bench_vector._run_metadata."""
+    import os
+    import platform
+    return {"python": platform.python_version(),
+            "platform": platform.platform(),
+            "cpu_count": os.cpu_count()}
+
+
+def same_host(record: dict, host: dict) -> bool:
+    return all(record.get(k) == host[k] for k in HOST_KEYS)
 
 
 def e2e_ratio(record: dict):
@@ -44,12 +68,15 @@ def e2e_ratio(record: dict):
     return None
 
 
-def last_baseline(trajectory_path: str, exclude_last: int = 0):
-    """(ratio, git_sha) of the newest trajectory row with a derivable
-    ratio, or (None, None).  ``exclude_last`` skips that many trailing
-    rows — ``bench_vector --smoke`` appends its own row *before* the
-    guard runs, so gating right after a smoke run must not compare the
-    fresh row against itself."""
+def last_baseline(trajectory_path: str, exclude_last: int = 0,
+                  host: dict = None):
+    """(ratio, git_sha) of the newest comparable trajectory row with a
+    derivable ratio, or (None, None).  ``exclude_last`` skips that many
+    trailing rows — ``bench_vector --smoke`` appends its own row *before*
+    the guard runs, so gating right after a smoke run must not compare
+    the fresh row against itself.  ``host`` (see :func:`host_metadata`)
+    restricts the scan to rows stamped with the same host metadata;
+    ``None`` disables the filter."""
     try:
         with open(trajectory_path) as fh:
             lines = [ln for ln in fh if ln.strip()]
@@ -61,6 +88,8 @@ def last_baseline(trajectory_path: str, exclude_last: int = 0):
         try:
             rec = json.loads(ln)
         except json.JSONDecodeError:
+            continue
+        if host is not None and not same_host(rec, host):
             continue
         ratio = e2e_ratio(rec)
         if ratio is not None:
@@ -82,6 +111,9 @@ def main(argv=None) -> int:
                     help="ignore the N newest trajectory rows (use 1 when "
                          "running right after 'bench_vector --smoke', "
                          "which has already appended the current run)")
+    ap.add_argument("--any-host", action="store_true",
+                    help="compare against any trajectory row regardless of "
+                         "its host metadata stamp (pre-filter behavior)")
     args = ap.parse_args(argv)
 
     try:
@@ -94,10 +126,16 @@ def main(argv=None) -> int:
         print(f"perf_guard: {args.smoke} has no e2e lane — nothing to gate")
         return 1
 
-    baseline, sha = last_baseline(args.trajectory, args.exclude_last)
+    host = None if args.any_host else host_metadata()
+    baseline, sha = last_baseline(args.trajectory, args.exclude_last,
+                                  host=host)
     if baseline is None:
-        print(f"perf_guard: no comparable baseline in {args.trajectory}; "
-              f"skipping (current e2e ratio {current:.3f})")
+        where = ("" if host is None
+                 else " with matching host metadata "
+                      f"({host['platform']}, {host['cpu_count']} cpus, "
+                      f"python {host['python']})")
+        print(f"perf_guard: no comparable baseline in {args.trajectory}"
+              f"{where}; skipping (current e2e ratio {current:.3f})")
         return 0
 
     floor = baseline * (1.0 - args.tolerance)

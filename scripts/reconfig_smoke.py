@@ -20,6 +20,7 @@ Wired into scripts/check.sh after the batched smoke; see
 
 from __future__ import annotations
 
+import argparse
 import functools
 import sys
 import time
@@ -37,11 +38,12 @@ ABOARD_SEEDS = frozenset((3, 9, 15))
 KERNEL_SEEDS = frozenset((2, 9, 14, 18))
 
 
-def batched_cls(seed: int):
+def batched_cls(seed: int, shards: int = 1):
+    kw = {"shards": shards} if shards > 1 else {}
     if seed in KERNEL_SEEDS:
         return functools.partial(BatchedMachine, use_kernel=True,
-                                 block_rows=1)
-    return BatchedMachine
+                                 block_rows=1, **kw)
+    return functools.partial(BatchedMachine, **kw) if kw else BatchedMachine
 
 
 def storm(machine_cls, seed: int) -> Cluster:
@@ -89,12 +91,18 @@ def storm(machine_cls, seed: int) -> Cluster:
     return cl
 
 
-def main() -> int:
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--shards", type=int, default=1,
+                    help="state-plane shard count for the batched cluster "
+                         "(>1 drives view installs / snapshot catch-up "
+                         "through per-shard plane rows)")
+    args = ap.parse_args(argv)
     t0 = time.time()
     total_ops = 0
     for seed in SEEDS:
         scalar = storm(Machine, seed)
-        batched = storm(batched_cls(seed), seed)
+        batched = storm(batched_cls(seed, args.shards), seed)
         want, got = completion_tuples(scalar), completion_tuples(batched)
         if want != got:
             print(f"seed {seed}: batched completions diverged "
@@ -114,9 +122,10 @@ def main() -> int:
         print(f"seed {seed:2d} [{mode:6s}/{impl:6s}]: {len(got):2d} "
               f"completions identical, epoch {st['view_epoch']}, "
               f"{st['net_removed_dst']} fenced sends, checkers green")
+    sharded = f", {args.shards} shards" if args.shards > 1 else ""
     print(f"reconfig smoke OK: {len(list(SEEDS))} seeds, {total_ops} client "
-          f"ops through 5 view changes each, completion-identical to "
-          f"scalar, view-transition + linearizability checkers green "
+          f"ops through 5 view changes each{sharded}, completion-identical "
+          f"to scalar, view-transition + linearizability checkers green "
           f"({time.time() - t0:.1f}s)")
     return 0
 

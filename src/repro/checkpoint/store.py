@@ -12,6 +12,16 @@ Write protocol (crash-safe without a coordinator):
 This is the paper's exactly-once RMW applied to checkpointing: two racing
 trainers (e.g. a restarted node plus its backup) cannot both commit step N,
 and a reader never observes a half-written checkpoint.
+
+Sharded state planes: with ``shards > 1`` every leaf whose trailing (lane)
+axis the shard count divides is serialized as one ``<key>@shard<s>`` entry
+per lane block — the same contiguous blocks the serve path's
+:class:`~repro.core.lanes.ShardMap` steers keys by, so each shard's plane
+rows round-trip as a unit (and a multi-host deployment could write each
+block from the host that owns it).  Restore is layout-agnostic: it accepts
+whole leaves or any shard split and reassembles bit-identically, so a
+checkpoint written at ``shards=4`` restores into a scalar stack and vice
+versa.
 """
 
 from __future__ import annotations
@@ -35,13 +45,51 @@ def _flatten(tree) -> dict:
     return flat
 
 
+def shard_tree(flat: dict, shards: int) -> dict:
+    """Split each leaf into per-shard lane blocks along its trailing axis.
+
+    A leaf the shard count does not divide (or a scalar) stays whole —
+    mirroring the serve path, where such an axis falls back to a single
+    shard rather than a ragged split.
+    """
+    if shards <= 1:
+        return dict(flat)
+    out = {}
+    for key, arr in flat.items():
+        if arr.ndim and arr.shape[-1] % shards == 0 and arr.shape[-1]:
+            for s, block in enumerate(np.split(arr, shards, axis=-1)):
+                out[f"{key}@shard{s}"] = block
+        else:
+            out[key] = arr
+    return out
+
+
+def unshard_tree(data, key: str) -> np.ndarray:
+    """Reassemble one leaf from ``data`` (a mapping / npz), whether it was
+    stored whole or as ``<key>@shard<s>`` lane blocks."""
+    if key in data:
+        return data[key]
+    blocks = []
+    s = 0
+    while f"{key}@shard{s}" in data:
+        blocks.append(data[f"{key}@shard{s}"])
+        s += 1
+    if not blocks:
+        raise KeyError(key)
+    return np.concatenate(blocks, axis=-1)
+
+
 def save(directory: str, run: str, step: int, tree: Any,
-         registry: Optional[PaxosRegistry] = None) -> bool:
+         registry: Optional[PaxosRegistry] = None,
+         shards: int = 1) -> bool:
     """Write shards, then commit via CAS.  Returns True iff we won the
-    commit (a racing trainer may have committed this step first)."""
+    commit (a racing trainer may have committed this step first).
+    ``shards > 1`` serializes each leaf as per-shard lane blocks (see the
+    module docstring)."""
     path = os.path.join(directory, run, f"step_{step:08d}")
     os.makedirs(path, exist_ok=True)
-    np.savez(os.path.join(path, "shards.npz"), **_flatten(tree))
+    np.savez(os.path.join(path, "shards.npz"),
+             **shard_tree(_flatten(tree), shards))
     if registry is None:
         return True
     return registry.commit_checkpoint(run, step)
@@ -64,7 +112,7 @@ def restore(directory: str, run: str, like: Any,
     for pth, leaf in leaves:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
                        for p in pth)
-        arr = jnp.asarray(data[key]).astype(leaf.dtype)
+        arr = jnp.asarray(unshard_tree(data, key)).astype(leaf.dtype)
         assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
         out.append(arr)
     return jax.tree_util.tree_unflatten(

@@ -25,6 +25,7 @@ which preserves the asynchrony model (delays/drops/crashes) for testing.
 
 from __future__ import annotations
 
+import functools
 import itertools
 from typing import Dict, Optional, Tuple
 
@@ -37,13 +38,27 @@ class PaxosRegistry:
     def __init__(self, n_machines: int = 5, *, all_aboard: bool = True,
                  net: Optional[NetConfig] = None, sessions: int = 8,
                  machine_cls: Optional[type] = None,
-                 reconfig: bool = False):
+                 reconfig: bool = False, shards: int = 1):
         """``machine_cls`` selects the replica implementation — pass
         :class:`repro.serve.paxos.BatchedMachine` to serve every
         coordination op through the batched two-engine path.
         ``reconfig=True`` governs membership by the config-register view
-        (live :meth:`add_replica` / :meth:`remove_replica`)."""
-        kw = {} if machine_cls is None else {"machine_cls": machine_cls}
+        (live :meth:`add_replica` / :meth:`remove_replica`).
+        ``shards`` splits every replica's state plane into that many
+        lane blocks (forwarded to the machine class); session picks then
+        steer across shard rows — see :meth:`_pick`."""
+        if shards > 1 and machine_cls is None:
+            raise ValueError(
+                "shards > 1 needs a shard-aware machine_cls "
+                "(repro.serve.paxos.BatchedMachine)")
+        self.shards = max(1, int(shards))
+        if machine_cls is None:
+            kw = {}
+        elif self.shards > 1:
+            kw = {"machine_cls": functools.partial(machine_cls,
+                                                   shards=self.shards)}
+        else:
+            kw = {"machine_cls": machine_cls}
         self.cluster = Cluster(
             ProtocolConfig(n_machines=n_machines,
                            sessions_per_machine=sessions,
@@ -76,13 +91,22 @@ class PaxosRegistry:
     def _pick(self) -> Tuple[int, int]:
         cfg = self.cluster.cfg
         members = self.cluster.active_view.members
+        spp = cfg.sessions_per_machine
+        # session -> shard steering: session lanes are block-partitioned
+        # over shard rows, so walk the shard blocks round-robin — two
+        # consecutive coordination ops land on distinct issuer shard rows
+        # (spreads fused-issuer occupancy across the mesh).  Unsharded
+        # (or non-divisible) this degenerates to the classic j % spp walk.
+        shards = self.shards if spp % self.shards == 0 else 1
+        width = spp // shards
         for _ in range(len(members)):
             i = next(self._rr)
             mid = members[i % len(members)]
             m = (self.cluster.machines[mid]
                  if mid < len(self.cluster.machines) else None)
             if m is not None and m.alive and not m.retired and not m.syncing:
-                sess = (i // len(members)) % cfg.sessions_per_machine
+                j = i // len(members)
+                sess = (j % shards) * width + (j // shards) % width
                 return mid, sess
         raise RuntimeError("no live machines")
 

@@ -13,10 +13,16 @@ never has to import the serve layer to get them.
 * the issuer round-lane loaders (round events -> ProposerTable lanes);
 * :func:`bucket_conflict_free` — single-pass O(n) conflict-free batch
   packing with O(1) generation-stamped flush bookkeeping, the strict-order
-  core the ingest scheduler builds on.
+  core the ingest scheduler builds on;
+* :class:`ShardMap` — pure key→shard steering over a block-partitioned
+  lane axis, the partition the multi-device plane layout is built on
+  (conflict-free batches already guarantee at most one message per lane,
+  so lanes — and therefore shards — are independent within a batch).
 """
 
 from __future__ import annotations
+
+import dataclasses
 
 from typing import Dict, List, Optional, Sequence
 
@@ -312,3 +318,92 @@ def bucket_conflict_free(trace: Sequence[Msg],
     if cur:
         batches.append(cur)
     return batches
+
+
+# ---------------------------------------------------------------------------
+# key -> shard steering (the multi-device plane partition)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardMap:
+    """Pure key→shard steering over a block-partitioned lane axis.
+
+    The lane axis of a plane stack (``K`` keys or ``S`` sessions) is split
+    into ``n_shards`` contiguous blocks of ``lanes_per_shard`` lanes each;
+    shard ``s`` owns lanes ``[s·lps, (s+1)·lps)``.  Contiguous blocks are
+    exactly how a JAX ``NamedSharding`` partitions an axis over a mesh
+    axis, so "the shard a key steers to" and "the device its lane lives
+    on" are the same thing by construction.
+
+    Pure and layout-derived: the map is a value, recomputed whenever the
+    lane axis grows (growth keeps the lane count a multiple of
+    ``n_shards``, so blocks stay aligned).  Conflict-free batches admit at
+    most one message per lane, so a batch split shard-by-shard
+    (:meth:`split`) yields sub-batches that touch disjoint plane blocks —
+    the property that makes shards independent within a wave.
+    """
+
+    n_shards: int
+    n_lanes: int
+
+    def __post_init__(self) -> None:
+        if self.n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {self.n_shards}")
+        if self.n_lanes < self.n_shards:
+            raise ValueError(
+                f"{self.n_lanes} lanes cannot cover {self.n_shards} shards")
+        if self.n_lanes % self.n_shards:
+            raise ValueError(
+                f"lane axis {self.n_lanes} not divisible into "
+                f"{self.n_shards} aligned shard blocks")
+
+    @property
+    def lanes_per_shard(self) -> int:
+        return self.n_lanes // self.n_shards
+
+    def shard_of(self, key: int) -> int:
+        """The shard whose plane block holds ``key``'s lane."""
+        if not 0 <= key < self.n_lanes:
+            raise ValueError(
+                f"key {key} outside the sharded lane axis "
+                f"[0, {self.n_lanes})")
+        return key // self.lanes_per_shard
+
+    def local_of(self, key: int) -> int:
+        """``key``'s lane offset within its shard's block."""
+        return key - self.shard_of(key) * self.lanes_per_shard
+
+    def slice_of(self, shard: int) -> slice:
+        """The contiguous lane slice owned by ``shard``."""
+        if not 0 <= shard < self.n_shards:
+            raise ValueError(f"no shard {shard} in a {self.n_shards}-way map")
+        lps = self.lanes_per_shard
+        return slice(shard * lps, (shard + 1) * lps)
+
+    def grown(self, n_lanes: int) -> "ShardMap":
+        """The map for a grown lane axis (same shard count)."""
+        return ShardMap(self.n_shards, n_lanes)
+
+    def aligned(self, n_lanes: int) -> int:
+        """Round a lane count up to the next shard-aligned size."""
+        n = self.n_shards
+        return ((max(n_lanes, n) + n - 1) // n) * n
+
+    def split(self, items: Sequence, key_of=None) -> List[List]:
+        """Partition a batch into per-shard sub-batches in one pass.
+
+        Order is preserved within each shard.  ``key_of`` extracts the
+        steering key (defaults to ``item.key`` — wire messages).
+        """
+        if key_of is None:
+            key_of = lambda item: item.key
+        out: List[List] = [[] for _ in range(self.n_shards)]
+        lps = self.lanes_per_shard
+        n = self.n_lanes
+        for item in items:
+            key = key_of(item)
+            if not 0 <= key < n:
+                raise ValueError(
+                    f"key {key} outside the sharded lane axis [0, {n})")
+            out[key // lps].append(item)
+        return out

@@ -214,11 +214,17 @@ class Machine:
         return (self._lid_counter << 16) | (sess & 0xFFFF)
 
     def _broadcast(self, msg: Msg) -> None:
+        # `msg` is the template: stamp it once, then hand each destination
+        # a lightweight clone (Msg.clone skips __init__ — per-destination
+        # dataclasses.replace was a measurable slice of the per-item host
+        # path; see benchmarks/bench_protocol.py host_path lane)
         msg.epoch = self.view.epoch
+        mid = self.mid
+        send = self._send
         sent = 0
         for dst in self.view.members:
-            if dst != self.mid:
-                self._send(self.mid, dst, dataclasses.replace(msg))
+            if dst != mid:
+                send(mid, dst, msg.clone())
                 sent += 1
         self.bump(f"sent_{msg.kind.name.lower()}", sent)
 

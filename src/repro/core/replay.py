@@ -66,7 +66,7 @@ from .types import (
 # replay oracle and the serving machine can never drift apart.
 from .lanes import (
     LOG_OPS as _LOG_OPS, RMW_OPS as _RMW_OPS, TS_OPS as _TS_OPS,
-    VALUE_OPS as _VALUE_OPS, bucket_conflict_free, kv_to_lanes,
+    VALUE_OPS as _VALUE_OPS, ShardMap, bucket_conflict_free, kv_to_lanes,
     load_abd_round as _load_abd_round_lanes,
     load_rmw_round as _load_rmw_round_lanes, msg_to_lanes, reply_to_lanes,
 )
@@ -76,7 +76,8 @@ from repro.kernels.paxos_apply import ops
 __all__ = [
     "ReplayMismatch", "bucket_conflict_free", "kv_to_lanes", "msg_to_lanes",
     "reply_to_lanes", "replay_trace", "replay_cluster",
-    "replay_cluster_fused", "run_and_replay", "run_and_replay_fused",
+    "replay_cluster_fused", "replay_sharded", "run_and_replay",
+    "run_and_replay_fused", "run_and_replay_sharded",
     "replay_issuer_trace", "replay_issuer_cluster", "run_and_replay_issuer",
 ]
 
@@ -274,13 +275,19 @@ _FUSED_NOOP["has_value"] = 1                    # matches MsgBatch.noop
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("use_kernel", "interpret", "block_rows"))
+                   static_argnames=("use_kernel", "interpret", "block_rows",
+                                    "shard_lanes"))
 def _fused_wave_step(kv_stack, msg_stack, is_reg, *, use_kernel,
-                     interpret, block_rows):
+                     interpret, block_rows, shard_lanes=None):
     """One fused receiver wave: (18,M,K),(11,M,K),(M,K) ->
     (18,M,K),(11,M,K),(M,K) — the ClusterEngine flattening convention
     (machine axis folded into the lane axis, kernel path padded to the
-    block tile, padded lanes NOOP by construction)."""
+    block tile, padded lanes NOOP by construction).  ``shard_lanes``
+    switches the kernel padding to shard-local segments: each
+    ``shard_lanes``-wide lane block pads to its own tile boundary, so a
+    compiled block never spans a shard boundary (the sharded engine's
+    segment convention; ``None`` = one whole-axis segment, the classic
+    layout bit for bit)."""
     n_kv = len(vector.KVTable._fields)
     n_msg = len(vector.MsgBatch._fields)
     m, k = is_reg.shape
@@ -290,16 +297,21 @@ def _fused_wave_step(kv_stack, msg_stack, is_reg, *, use_kernel,
     reg = is_reg.reshape(n) != 0
     if use_kernel:
         tile = block_rows * ops.LANE
-        n_pad = ((n + tile - 1) // tile) * tile
-        pad = n_pad - n
-        kv_p = vector.KVTable(*[jnp.pad(a, (0, pad)) for a in kv])
-        msg_p = vector.MsgBatch(*[jnp.pad(a, (0, pad)) for a in msg])
+        seg = shard_lanes if shard_lanes else n
+        seg_pad = ((seg + tile - 1) // tile) * tile
+        kv_p = vector.KVTable(
+            *[ops.pad_segments(a, seg, seg_pad) for a in kv])
+        msg_p = vector.MsgBatch(
+            *[ops.pad_segments(a, seg, seg_pad) for a in msg])
         new_kv, replies, mask = ops.paxos_apply(
-            kv_p, msg_p, jnp.pad(reg.astype(jnp.int32), (0, pad)),
+            kv_p, msg_p,
+            ops.pad_segments(reg.astype(jnp.int32), seg, seg_pad),
             block_rows=block_rows, interpret=interpret)
-        new_kv = vector.KVTable(*[a[:n] for a in new_kv])
-        replies = type(replies)(*[a[:n] for a in replies])
-        mask = mask[:n] != 0
+        new_kv = vector.KVTable(
+            *[ops.unpad_segments(a, seg, seg_pad) for a in new_kv])
+        replies = type(replies)(
+            *[ops.unpad_segments(a, seg, seg_pad) for a in replies])
+        mask = ops.unpad_segments(mask, seg, seg_pad) != 0
     else:
         new_kv, replies, mask = vector.apply_batch(kv, msg, reg)
     return (jnp.stack([a.reshape(m, k) for a in new_kv]),
@@ -442,6 +454,184 @@ def run_and_replay_fused(seed: int, *, n_ops: int = 24, keys: int = 3,
     stats = replay_cluster_fused(cluster, n_keys=keys,
                                  use_kernel=use_kernel, interpret=interpret,
                                  block_rows=block_rows)
+    stats["history"] = len(cluster.history)
+    return stats
+
+
+def replay_sharded(cluster: Cluster, *, n_keys: int, shards: int = 2,
+                   use_kernel: bool = True, interpret: bool = True,
+                   block_rows: int = 1,
+                   machines: Optional[Sequence[int]] = None
+                   ) -> Dict[str, int]:
+    """:func:`replay_cluster_fused` with a sharded lane axis, checked
+    shard for shard.
+
+    The lane axis is aligned up to ``shards`` contiguous blocks (the
+    :class:`~repro.core.lanes.ShardMap` block partition — lane == key, no
+    permutation) and the fused wave runs with shard-local kernel
+    segments, exactly like the sharded ClusterEngine.  Against the same
+    N scalar-handler shadows this asserts, per wave, every staged reply;
+    per wave, that each machine's registry (gathered pre-wave, commit
+    registrations scattered post-wave) matches the scalar one AND that
+    re-merging the per-shard registration journals — the cross-shard
+    scatter bookkeeping the serve bridge mirrors — reproduces it; and,
+    finally, every KV plane of every shard block of every row.  Raises
+    :class:`ReplayMismatch` naming the shard on the first divergence.
+    """
+    if shards < 1:
+        raise ValueError(f"shards must be >= 1, got {shards}")
+    mids = list(machines if machines is not None
+                else range(len(cluster.machines)))
+    num_gsess = cluster.cfg.num_gsess
+    batches: List[List[List[Msg]]] = []
+    total_msgs = 0
+    for mid in mids:
+        trace = cluster.machines[mid].msg_trace
+        if trace is None:
+            raise ValueError(
+                f"machine {mid} has no msg_trace — call "
+                f"cluster.enable_msg_trace() before running the workload")
+        for msg in trace:
+            if msg.key >= n_keys:
+                raise ValueError(f"trace touches key {msg.key} >= n_keys "
+                                 f"{n_keys}")
+        total_msgs += len(trace)
+        batches.append(bucket_conflict_free(trace))
+
+    m = len(mids)
+    k_al = ShardMap(shards, shards).aligned(n_keys)
+    sm = ShardMap(shards, k_al)
+    lps = sm.lanes_per_shard
+    fields = vector.MsgBatch._fields
+    rep_fields = vector.ReplyBatch._fields
+    # scalar shadows (one per row); fused side: the machine-global
+    # registry every shard gathers from, plus one registration journal
+    # per shard row (the bridge's reg_mirror analogue)
+    kvs: List[Dict[int, KVPair]] = [{} for _ in mids]
+    regs = [Registry(num_gsess) for _ in mids]
+    freg = [[0] * num_gsess for _ in mids]
+    journals = [[{} for _ in range(shards)] for _ in mids]
+    fresh = vector.KVTable.fresh(k_al)
+    kv_stack = jnp.stack([jnp.broadcast_to(p, (m, k_al)) for p in fresh])
+
+    n_waves = max((len(b) for b in batches), default=0)
+    shard_lane_counts = [0] * shards
+    kind_counts: Dict[str, int] = {}
+    for wave in range(n_waves):
+        msg_host = np.zeros((len(fields), m, k_al), np.int32)
+        for i, f in enumerate(fields):
+            if _FUSED_NOOP[f]:
+                msg_host[i] = _FUSED_NOOP[f]
+        reg_host = np.zeros((m, k_al), np.int32)
+        staged: List[tuple] = []
+        for row in range(m):
+            if wave >= len(batches[row]):
+                continue
+            for msg in batches[row][wave]:
+                lane = msg_to_lanes(msg)
+                for i, f in enumerate(fields):
+                    msg_host[i, row, msg.key] = lane[f]
+                gs, cnt = msg.rmw_id.gsess, msg.rmw_id.counter
+                reg_host[row, msg.key] = int(
+                    gs >= 0 and freg[row][min(gs, num_gsess - 1)] >= cnt)
+                shard_lane_counts[sm.shard_of(msg.key)] += 1
+                staged.append((row, msg))
+        kv_stack, rep_stack, reg_mask = _fused_wave_step(
+            kv_stack, jnp.asarray(msg_host), jnp.asarray(reg_host),
+            use_kernel=use_kernel, interpret=interpret,
+            block_rows=block_rows,
+            shard_lanes=lps if shards > 1 else None)
+        rep_np = np.asarray(rep_stack)
+        mask_np = np.asarray(reg_mask)
+        for row, msg in staged:
+            rep = handlers.apply_msg(get_kv(kvs[row], msg.key), msg,
+                                     regs[row])
+            k = msg.kind.name.lower()
+            kind_counts[k] = kind_counts.get(k, 0) + 1
+            want = _expected_reply_lanes(rep)
+            got = {f: int(rep_np[rep_fields.index(f), row, msg.key])
+                   for f in want}
+            if got != want:
+                raise ReplayMismatch(
+                    f"sharded reply diverged at wave {wave}, machine "
+                    f"{mids[row]}, shard {sm.shard_of(msg.key)}, key "
+                    f"{msg.key}, msg {msg}:\n scalar: {want}\n"
+                    f" fused:  {got}")
+        # cross-shard registry scatter: a commit lane's registration
+        # max-merges into the machine-global registry AND journals under
+        # its owning shard
+        for row, msg in staged:
+            if mask_np[row, msg.key]:
+                gs, cnt = msg.rmw_id.gsess, msg.rmw_id.counter
+                if 0 <= gs < num_gsess and cnt > freg[row][gs]:
+                    freg[row][gs] = cnt
+                if 0 <= gs < num_gsess:
+                    j = journals[row][sm.shard_of(msg.key)]
+                    if cnt > j.get(gs, 0):
+                        j[gs] = cnt
+        for row in range(m):
+            if freg[row] != regs[row].committed:
+                raise ReplayMismatch(
+                    f"sharded registry diverged at wave {wave}, machine "
+                    f"{mids[row]}:\n scalar: {regs[row].committed}\n"
+                    f" fused:  {freg[row]}")
+            merged = [0] * num_gsess
+            for j in journals[row]:
+                for gs, cnt in j.items():
+                    if cnt > merged[gs]:
+                        merged[gs] = cnt
+            if merged != freg[row]:
+                raise ReplayMismatch(
+                    f"per-shard registration journals diverged from the "
+                    f"global registry at wave {wave}, machine {mids[row]}:"
+                    f"\n merged journals: {merged}\n global: {freg[row]}")
+
+    # final state: every row, shard block by shard block, plane for plane
+    kv_np = np.asarray(kv_stack)
+    kv_fields = vector.KVTable._fields
+    for row in range(m):
+        for shard in range(shards):
+            for key in range(*sm.slice_of(shard).indices(k_al)):
+                scalar_kv = kvs[row].get(key) or KVPair(key=key)
+                want = kv_to_lanes(scalar_kv)
+                got = {f: int(kv_np[i, row, key])
+                       for i, f in enumerate(kv_fields)}
+                if got != want:
+                    diff = {f: (want[f], got[f])
+                            for f in want if want[f] != got[f]}
+                    raise ReplayMismatch(
+                        f"sharded final KV state diverged at machine "
+                        f"{mids[row]}, shard {shard}, key {key} "
+                        f"(field: (scalar, fused)): {diff}")
+
+    stats = {"machines": m, "messages": total_msgs, "fused_waves": n_waves,
+             "shards": shards, "lane_axis": k_al}
+    for s, c in enumerate(shard_lane_counts):
+        stats[f"shard{s}_lanes"] = c
+    stats.update(kind_counts)
+    return stats
+
+
+def run_and_replay_sharded(seed: int, *, shards: int = 2, n_ops: int = 24,
+                           keys: int = 3,
+                           cfg: Optional[ProtocolConfig] = None,
+                           net: Optional[NetConfig] = None,
+                           rmw_frac: float = 0.45, write_frac: float = 0.3,
+                           use_kernel: bool = True, interpret: bool = True,
+                           block_rows: int = 1) -> Dict[str, int]:
+    """End-to-end sharded harness: seeded faulty sim -> sharded replay."""
+    cfg = cfg or ProtocolConfig(n_machines=5, sessions_per_machine=2)
+    net = net or NetConfig(seed=seed, drop_prob=0.06, dup_prob=0.05,
+                          heavy_tail_prob=0.03, heavy_tail_extra=25.0)
+    cluster = Cluster(cfg, net)
+    cluster.enable_msg_trace()
+    workload(cluster, n_ops=n_ops, keys=keys, seed=seed,
+             rmw_frac=rmw_frac, write_frac=write_frac, op=RmwOp.FAA)
+    if not cluster.run_until_quiet(max_ticks=120_000):
+        raise RuntimeError(f"sim (seed {seed}) did not quiesce")
+    stats = replay_sharded(cluster, n_keys=keys, shards=shards,
+                           use_kernel=use_kernel, interpret=interpret,
+                           block_rows=block_rows)
     stats["history"] = len(cluster.history)
     return stats
 

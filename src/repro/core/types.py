@@ -289,6 +289,18 @@ class Msg:
             base += 8
         return base + 8                        # lid
 
+    def clone(self) -> "Msg":
+        """A shallow field copy, bypassing ``__init__``.
+
+        ``dataclasses.replace`` re-runs the constructor per copy, which
+        dominates the hot broadcast/trace paths (one copy per destination
+        per send); TS/RmwId payloads are immutable, so a ``__dict__``
+        copy is equivalent.
+        """
+        dup = Msg.__new__(Msg)
+        dup.__dict__.update(self.__dict__)
+        return dup
+
 
 @dataclasses.dataclass
 class Reply:

@@ -36,6 +36,13 @@ RULES = {
     "experts": (("model",),),
     "expert_mlp": (("model",),),    # TP-within-expert strategy (mixtral)
     "stack": ((),),                 # scan-stacked layer dim: never sharded
+    # serve-plane logical axes (repro.serve.paxos.cluster_engine): the lane
+    # axis of a PlaneStack block-partitions over the "shard" mesh axis —
+    # contiguous lane blocks == ShardMap shard blocks by construction;
+    # plane-field and machine axes are never sharded.
+    "lanes": (("shard",),),
+    "plane_fields": ((),),
+    "machines": ((),),
     None: ((),),
 }
 

@@ -87,12 +87,13 @@ schedule — with the per-lane transitions themselves already proven
 equivalent, plane-for-plane, by :mod:`repro.core.replay`.
 """
 
-from .bridge import KVBridge, SteeringTable
+from repro.core.lanes import ShardMap
+from .bridge import KVBridge, ShardedKVView, SteeringTable
 from .cluster_engine import ClusterEngine
 from .machine import BatchedMachine
 from .scheduler import DEFAULT_BATCH_TARGET, IngestScheduler, \
     bucket_conflict_free
 
 __all__ = ["BatchedMachine", "ClusterEngine", "DEFAULT_BATCH_TARGET",
-           "IngestScheduler", "KVBridge", "SteeringTable",
-           "bucket_conflict_free"]
+           "IngestScheduler", "KVBridge", "ShardMap", "ShardedKVView",
+           "SteeringTable", "bucket_conflict_free"]

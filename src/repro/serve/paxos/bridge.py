@@ -51,7 +51,7 @@ from repro.core import vector
 # re-exported here because they are part of this bridge's public surface.
 from repro.core.lanes import (                                    # noqa: F401
     ABD_PLANES, LOG_OPS, RMW_OPS, TALLY_PLANES, TS_OPS, VALUE_OPS,
-    action_payload, kv_to_lanes, lanes_to_kv, load_abd_round,
+    ShardMap, action_payload, kv_to_lanes, lanes_to_kv, load_abd_round,
     load_rmw_round, log_too_low_reply, lower_acc_reply, msg_to_lanes,
     reply_from_lanes, reply_to_lanes,
 )
@@ -92,14 +92,21 @@ class KVBridge:
     """
 
     def __init__(self, n_keys: int = 8, *, stack: Optional[PlaneStack] = None,
-                 mi: int = 0):
+                 mi: int = 0, shards: int = 1):
         if stack is None:
             stack = PlaneStack(vector.KVTable._fields, KV_DEFAULTS,
-                               1, max(8, n_keys))
+                               1, max(8, n_keys), n_shards=shards)
             mi = 0
         self._stack = stack
         self._mi = mi
         self._views: Dict[int, KVPair] = {}
+        # sharded registry mirror: per shard, the highest rmw-id counter
+        # registered by commits that landed in that shard's lane block
+        # (gsess -> counter).  The machine-global scalar registry is the
+        # cross-shard max-merge of these journals plus snapshot state —
+        # see ClusterEngine._run_receiver's scatter.
+        self.reg_mirror: List[Dict[int, int]] = [
+            {} for _ in range(self._stack.n_shards)]
 
     @property
     def planes(self) -> Dict[str, np.ndarray]:
@@ -110,6 +117,37 @@ class KVBridge:
     @property
     def n_keys(self) -> int:
         return self._stack.n_lanes
+
+    # -- shard layout ---------------------------------------------------------
+
+    @property
+    def shard_map(self) -> ShardMap:
+        """Key→shard steering over the stack's current lane axis."""
+        return self._stack.shard_map
+
+    def shard_planes(self, shard: int) -> Dict[str, np.ndarray]:
+        """Mutable host views of one *shard block* of this machine's KV
+        row — the per-shard plane set (checkpointing serializes these;
+        per-shard host writes mark only that block dirty)."""
+        sl = self.shard_map.slice_of(shard)
+        planes = self._stack.write_views(self._mi)
+        self._stack.mark_shard_dirty(shard)
+        return {f: planes[f][sl] for f in self._stack.fields}
+
+    def shard_view(self, shard: int) -> "ShardedKVView":
+        """A checkout view restricted to ``shard``'s keys: foreign-shard
+        checkouts raise a loud ``ValueError`` (a silent cross-shard write
+        would corrupt another shard's plane block without failing any
+        checker)."""
+        return ShardedKVView(self, shard)
+
+    def note_registration(self, shard: int, gsess: int, cnt: int) -> None:
+        """Journal a commit registration into its shard's mirror."""
+        while shard >= len(self.reg_mirror):     # stack shard growth
+            self.reg_mirror.append({})
+        mirror = self.reg_mirror[shard]
+        if cnt > mirror.get(gsess, -1):
+            mirror[gsess] = cnt
 
     def ensure(self, key: int) -> None:
         """Grow the stack's lane axis (power-of-two) to cover ``key``."""
@@ -163,6 +201,56 @@ class KVBridge:
         self._views.clear()
 
 
+class ShardedKVView:
+    """One shard's restriction of a :class:`KVBridge`.
+
+    Shares the parent bridge's checkout cache (so the engine's
+    flush/drop_views discipline covers it), but any access to a key steered
+    to a foreign shard raises ``ValueError`` loudly — the guard the sharded
+    serve path and checkpointing use to make mis-steering impossible to
+    miss.
+    """
+
+    def __init__(self, bridge: KVBridge, shard: int):
+        n_shards = bridge.shard_map.n_shards
+        if not 0 <= shard < n_shards:
+            raise ValueError(f"no shard {shard} in a {n_shards}-way layout")
+        self._bridge = bridge
+        self.shard = shard
+
+    def _check(self, key: int) -> None:
+        owner = self._bridge.shard_map.shard_of(key)
+        if owner != self.shard:
+            raise ValueError(
+                f"key {key} is steered to shard {owner}, not shard "
+                f"{self.shard}: cross-shard checkout would write a foreign "
+                f"plane block")
+
+    def get(self, key: int, default=None):
+        del default
+        return self[key]
+
+    def __getitem__(self, key: int) -> KVPair:
+        self._check(key)
+        return self._bridge[key]
+
+    def __setitem__(self, key: int, kv: KVPair) -> None:
+        self._check(key)
+        self._bridge[key] = kv
+
+    def __contains__(self, key: int) -> bool:
+        return (0 <= key < self._bridge.n_keys
+                and self._bridge.shard_map.shard_of(key) == self.shard)
+
+    def keys(self):
+        sl = self._bridge.shard_map.slice_of(self.shard)
+        return range(sl.start, sl.stop)
+
+    @property
+    def planes(self) -> Dict[str, np.ndarray]:
+        return self._bridge.shard_planes(self.shard)
+
+
 # ---------------------------------------------------------------------------
 # lid -> (machine, lane) reply steering
 # ---------------------------------------------------------------------------
@@ -182,19 +270,55 @@ class SteeringTable:
     ``(machine row, lane)`` slot a reply folds into.
     """
 
-    def __init__(self, n_lanes: int, mid: int = 0):
+    def __init__(self, n_lanes: int, mid: int = 0,
+                 shard_map: Optional[ShardMap] = None):
         self.n_lanes = n_lanes
         self.mid = mid
+        # session→shard steering: which shard block of the stacked
+        # ProposerTable each session lane lives in (None = unsharded)
+        self.shard_map = shard_map
+        if shard_map is not None and shard_map.n_lanes != n_lanes:
+            raise ValueError(
+                f"shard map covers {shard_map.n_lanes} lanes, steering "
+                f"table has {n_lanes}")
         self._live: List[List[int]] = [[0, 0] for _ in range(n_lanes)]
         self.epoch = 0
         self.stats = {"steered": 0, "dropped": 0, "stale": 0,
                       "view_remaps": 0}
 
-    def remap(self, epoch: int) -> None:
+    def shard_of(self, lid: int) -> Optional[int]:
+        """The issuer shard a reply lid steers to (None when unsharded
+        or unroutable)."""
+        if self.shard_map is None:
+            return None
+        lane = lid & 0xFFFF
+        if not 0 <= lane < self.n_lanes:
+            return None
+        return self.shard_map.shard_of(lane)
+
+    def remap(self, epoch: int,
+              shard_map: Optional[ShardMap] = None) -> None:
         """Note a view install.  Lids are machine-local (they encode the
         issuing session, not the membership), so routing is unchanged
         across views — cross-epoch replies are fenced *before* steering
-        (``Machine._admit``); this only tracks the epoch for stats."""
+        (``Machine._admit``); this tracks the epoch for stats and, when a
+        shard map is supplied, re-checks the session→shard steering: a
+        remap that would move any *live* lane's lid to a foreign shard
+        raises a loud ``ValueError`` (lids already in flight would fold
+        into another shard's plane block)."""
+        if shard_map is not None:
+            old = self.shard_map
+            if old is not None:
+                for lane, live in enumerate(self._live):
+                    if not any(live):
+                        continue
+                    if shard_map.shard_of(lane) != old.shard_of(lane):
+                        raise ValueError(
+                            f"view remap steers live session lane {lane} "
+                            f"(lids {live}) from shard "
+                            f"{old.shard_of(lane)} to foreign shard "
+                            f"{shard_map.shard_of(lane)}")
+            self.shard_map = shard_map
         if epoch != self.epoch:
             self.epoch = epoch
             self.stats["view_remaps"] += 1

@@ -70,13 +70,18 @@ from typing import Dict, Iterable, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding
 
 from repro.core import proposer_vector, vector
-from repro.core.lanes import kv_to_lanes, msg_to_lanes, reply_to_lanes
+from repro.core.lanes import (
+    ShardMap, kv_to_lanes, msg_to_lanes, reply_to_lanes,
+)
 from repro.core.types import KVPair
 from repro.kernels.paxos_apply import kernel as apply_kernel
+from repro.kernels.paxos_apply.ops import pad_segments, unpad_segments
 from repro.kernels.paxos_propose import ops as propose_ops
 from repro.kernels.paxos_propose.kernel import N_PAR
+from repro.parallel import sharding as plane_sharding
 
 # CPU backends may decline a donation (the buffer is still consumed
 # semantically — we never re-read it); the warning would fire per compile.
@@ -134,17 +139,36 @@ class PlaneStack:
 
     Per-machine field->row view dicts are cached (rebuilt only on growth),
     so host bridges hand out lane views without per-access dict builds.
+
+    **Shard axis.**  With ``n_shards > 1`` the lane axis is kept a multiple
+    of ``n_shards`` and treated as that many contiguous shard blocks (the
+    :class:`~repro.core.lanes.ShardMap` block partition).  :meth:`set_mesh`
+    places the device array on a JAX mesh with a ``"shard"`` axis — the
+    lane dimension block-partitions over it (``repro.parallel.sharding``
+    rule ``"lanes"``), so a shard's lane block and its device are the same
+    thing.  Host dirtiness is tracked per shard block
+    (:attr:`shard_dirty`): whole-row host writes mark every block, a
+    per-shard flush (:meth:`mark_shard_dirty`) marks one; the upload
+    itself ships the stack in one transfer either way (the donated device
+    array is one buffer), but the flags record which shard rows actually
+    diverged — the sync bookkeeping per-shard checkpointing and the bench
+    occupancy lanes read.
     """
 
     def __init__(self, fields: Tuple[str, ...], defaults: Dict[str, int],
-                 n_machines: int, n_lanes: int):
+                 n_machines: int, n_lanes: int, n_shards: int = 1):
         self.fields = tuple(fields)
+        self.n_shards = max(1, n_shards)
+        n_lanes = ShardMap(self.n_shards, self.n_shards).aligned(n_lanes)
         self._defaults = np.array([defaults[f] for f in self.fields], I32)
         self.host = np.empty((len(self.fields), n_machines, n_lanes), I32)
         self.host[:] = self._defaults[:, None, None]
         self.dev: Optional[jnp.ndarray] = None
-        self.host_dirty = True
+        self.shard_dirty = np.ones(self.n_shards, dtype=bool)
         self.dev_fresh = False
+        self._mesh: Optional[Mesh] = None
+        self._sharding: Optional[NamedSharding] = None
+        self._sharding_shape: Optional[Tuple[int, ...]] = None
         self._views: List[Dict[str, np.ndarray]] = []
         self._rebuild_views()
 
@@ -157,6 +181,53 @@ class PlaneStack:
     @property
     def n_lanes(self) -> int:
         return self.host.shape[2]
+
+    @property
+    def shard_map(self) -> ShardMap:
+        """The key→shard steering for this stack's current lane axis."""
+        return ShardMap(self.n_shards, self.n_lanes)
+
+    # -- host dirtiness (tracked per shard block) ----------------------------
+
+    @property
+    def host_dirty(self) -> bool:
+        return bool(self.shard_dirty.any())
+
+    @host_dirty.setter
+    def host_dirty(self, value: bool) -> None:
+        self.shard_dirty[:] = value
+
+    def mark_shard_dirty(self, shard: int) -> None:
+        """Record host writes confined to one shard's lane block."""
+        self.shard_dirty[shard] = True
+
+    # -- device placement ----------------------------------------------------
+
+    def set_mesh(self, mesh: Optional[Mesh]) -> None:
+        """Place the device array on ``mesh``: plane fields and machine
+        rows replicate, the lane axis block-partitions over the mesh's
+        ``"shard"`` axis.  Resolution is divisibility-aware (a lane axis
+        the mesh does not divide falls back to replication), so a stack
+        whose shard count exceeds the device count still works — layout
+        and steering stay host-side truths either way."""
+        self._mesh = mesh
+        self._sharding = None
+        self._sharding_shape = None
+        if self.dev is not None:
+            self.pull()
+            self.dev = None
+            self.host_dirty = True
+
+    def device_sharding(self) -> Optional[NamedSharding]:
+        if self._mesh is None:
+            return None
+        if self._sharding_shape != self.host.shape:
+            spec = plane_sharding.resolve(
+                ("plane_fields", "machines", "lanes"), self._mesh,
+                shape=self.host.shape)
+            self._sharding = NamedSharding(self._mesh, spec)
+            self._sharding_shape = self.host.shape
+        return self._sharding
 
     def _rebuild_views(self) -> None:
         self._views = [
@@ -174,7 +245,9 @@ class PlaneStack:
         """
         self.pull()
         new_m = max(self.n_machines, n_machines or 0)
-        new_l = max(self.n_lanes, n_lanes or 0)
+        # lane growth stays shard-aligned: blocks keep their boundaries
+        new_l = ShardMap(self.n_shards, self.n_shards).aligned(
+            max(self.n_lanes, n_lanes or 0))
         if (new_m, new_l) == (self.n_machines, self.n_lanes):
             return
         grown = np.empty((len(self.fields), new_m, new_l), I32)
@@ -207,7 +280,9 @@ class PlaneStack:
     def load_row(self, mi: int, src: "PlaneStack", src_mi: int) -> None:
         """Copy machine ``src_mi``'s lanes from ``src`` into row ``mi``
         (growing this stack's lane axis to cover them); lanes past the
-        source keep defaults.  Field layouts must match."""
+        source keep defaults.  Field layouts must match.  With a sharded
+        lane axis the reload runs shard block by shard block — the
+        evict/reload unit of crash/restart and view installs."""
         assert src.fields == self.fields
         if src.n_lanes > self.n_lanes:
             self.grow(n_lanes=src.n_lanes)
@@ -215,6 +290,12 @@ class PlaneStack:
         src.pull()
         self.host_dirty = True
         length = src.n_lanes
+        if self.n_shards > 1 and length == self.n_lanes:
+            sm = self.shard_map
+            for s in range(self.n_shards):
+                sl = sm.slice_of(s)
+                self.host[:, mi, sl] = src.host[:, src_mi, sl]
+            return
         self.host[:, mi, :length] = src.host[:, src_mi, :]
         self.host[:, mi, length:] = self._defaults[:, None]
 
@@ -223,9 +304,15 @@ class PlaneStack:
 
         The returned array is about to be *donated*: the caller must
         :meth:`absorb` the step's output before any further host access.
+        A mesh-placed stack uploads straight into its block-partitioned
+        layout (one ``device_put`` distributing the lane blocks).
         """
         if self.host_dirty or self.dev is None:
-            self.dev = jnp.asarray(self.host)
+            sharding = self.device_sharding()
+            if sharding is not None:
+                self.dev = jax.device_put(self.host, sharding)
+            else:
+                self.dev = jnp.asarray(self.host)
             self.host_dirty = False
         return self.dev
 
@@ -242,14 +329,23 @@ class PlaneStack:
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, donate_argnums=(0,),
-                   static_argnames=("use_kernel", "interpret", "block_rows"))
+                   static_argnames=("use_kernel", "interpret", "block_rows",
+                                    "shard_lanes", "out_sharding"))
 def _fused_receiver_step(kv_stack, msgreg_stack, *, use_kernel,
-                         interpret, block_rows):
+                         interpret, block_rows, shard_lanes=None,
+                         out_sharding=None):
     """One receiver step for every machine: (18,M,K),(12,M,K) ->
     (18,M,K),(11,M,K),(M,K).  Flattens the machine axis into the lane axis
     — apply_batch is elementwise, so rows stay isolated by construction.
     The 12th input plane is the host-gathered is_registered bit, packed
-    with the message planes so one transfer stages the whole wave."""
+    with the message planes so one transfer stages the whole wave.
+
+    ``shard_lanes`` (static) declares the lane axis as shard-aligned
+    segments of that length: each machine row is n_shards contiguous
+    blocks, so the flattened axis is M·n_shards segments, each padded
+    independently to the kernel tile — compiled blocks never straddle a
+    shard boundary.  One segment (``None``) is whole-axis padding; either
+    way the step is elementwise, so the outputs are bit-identical."""
     msg_stack = msgreg_stack[:N_MSG]
     is_reg = msgreg_stack[N_MSG]
     m, k = is_reg.shape
@@ -259,31 +355,47 @@ def _fused_receiver_step(kv_stack, msgreg_stack, *, use_kernel,
     reg = is_reg.reshape(n) != 0
     if use_kernel:
         tile = block_rows * apply_kernel.LANE
-        n_pad = ((n + tile - 1) // tile) * tile
-        pad = n_pad - n
-        kv_p = vector.KVTable(*[jnp.pad(a, (0, pad)) for a in kv])
+        seg = shard_lanes if shard_lanes else n
+        seg_pad = ((seg + tile - 1) // tile) * tile
+        kv_p = vector.KVTable(
+            *[pad_segments(a, seg, seg_pad) for a in kv])
         # padded lanes become NOOP automatically (kind=0)
-        msg_p = vector.MsgBatch(*[jnp.pad(a, (0, pad)) for a in msg])
+        msg_p = vector.MsgBatch(
+            *[pad_segments(a, seg, seg_pad) for a in msg])
         new_kv, replies, mask = apply_kernel.paxos_apply(
-            kv_p, msg_p, jnp.pad(reg.astype(jnp.int32), (0, pad)),
+            kv_p, msg_p,
+            pad_segments(reg.astype(jnp.int32), seg, seg_pad),
             block_rows=block_rows, interpret=interpret)
-        new_kv = vector.KVTable(*[a[:n] for a in new_kv])
-        replies = type(replies)(*[a[:n] for a in replies])
-        mask = mask[:n] != 0
+        new_kv = vector.KVTable(
+            *[unpad_segments(a, seg, seg_pad) for a in new_kv])
+        replies = type(replies)(
+            *[unpad_segments(a, seg, seg_pad) for a in replies])
+        mask = unpad_segments(mask, seg, seg_pad) != 0
     else:
         new_kv, replies, mask = vector.apply_batch(kv, msg, reg)
-    return (jnp.stack([a.reshape(m, k) for a in new_kv]),
+    new_stack = jnp.stack([a.reshape(m, k) for a in new_kv])
+    if out_sharding is not None:
+        # the (M,K)->(M·K,) flatten defeats sharding propagation (a lane
+        # block per row is not a contiguous block of the merged axis);
+        # re-pin the resident output to its lane-partitioned layout so
+        # residency keeps the planes distributed across waves
+        new_stack = jax.lax.with_sharding_constraint(new_stack, out_sharding)
+    return (new_stack,
             jnp.stack([a.reshape(m, k) for a in replies]),
             mask.reshape(m, k))
 
 
 @functools.partial(jax.jit, donate_argnums=(0,),
-                   static_argnames=("use_kernel", "interpret", "block_rows"))
+                   static_argnames=("use_kernel", "interpret", "block_rows",
+                                    "shard_lanes", "out_sharding"))
 def _fused_issuer_step(tab_stack, rep_stack, params, *, use_kernel,
-                       interpret, block_rows):
+                       interpret, block_rows, shard_lanes=None,
+                       out_sharding=None):
     """One issuer step for every machine: (65,M,S),(13,M,S),(4,M,1) ->
     (65,M,S),(14,M,S).  Quorum parameters broadcast per machine row —
-    each machine's active view pins its own quorum sizes (§8.7)."""
+    each machine's active view pins its own quorum sizes (§8.7).
+    ``shard_lanes`` as in :func:`_fused_receiver_step` (session-lane
+    segments)."""
     m, s = rep_stack.shape[1], rep_stack.shape[2]
     if use_kernel:
         n = m * s
@@ -294,20 +406,42 @@ def _fused_issuer_step(tab_stack, rep_stack, params, *, use_kernel,
         par = jnp.broadcast_to(params, (N_PAR, m, s)).reshape(N_PAR, n)
         new_t, act = propose_ops._issuer_step(
             t, rep, par, block_rows=block_rows, interpret=interpret,
-            use_kernel=True)
-        return (jnp.stack([a.reshape(m, s) for a in new_t]),
-                jnp.stack([a.reshape(m, s) for a in act]))
+            use_kernel=True, shard_lanes=shard_lanes)
+        new_stack = jnp.stack([a.reshape(m, s) for a in new_t])
+        if out_sharding is not None:
+            new_stack = jax.lax.with_sharding_constraint(
+                new_stack, out_sharding)
+        return new_stack, jnp.stack([a.reshape(m, s) for a in act])
     t = proposer_vector.ProposerTable(*[tab_stack[i] for i in range(N_TAB)])
     rep = proposer_vector.IssuerReplyBatch(
         *[rep_stack[i] for i in range(N_IREP)])
     new_t, act = proposer_vector.proposer_core(
         t, rep, params[0], params[1], params[2], params[3])
-    return jnp.stack(new_t), jnp.stack(act)
+    new_stack = jnp.stack(new_t)
+    if out_sharding is not None:
+        new_stack = jax.lax.with_sharding_constraint(new_stack, out_sharding)
+    return new_stack, jnp.stack(act)
 
 
 # ---------------------------------------------------------------------------
 # the engine
 # ---------------------------------------------------------------------------
+
+def _shard_mesh(shards: int) -> Optional[Mesh]:
+    """A 1-D ``"shard"`` mesh over the first ``shards`` devices.
+
+    ``None`` when sharding is off or the backend exposes fewer devices —
+    the shard *layout* (aligned lane blocks, steering, per-shard batches)
+    applies host-side either way; only the physical placement needs the
+    devices (CI forces them on CPU via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=4``)."""
+    if shards <= 1:
+        return None
+    devices = jax.devices()
+    if len(devices) < shards:
+        return None
+    return Mesh(np.array(devices[:shards]), ("shard",))
+
 
 class ClusterEngine:
     """Owns the cluster's stacked planes and drives fused tick waves.
@@ -317,29 +451,62 @@ class ClusterEngine:
     ``("issuer", batch)`` requests and is resumed with row views of the
     fused output planes.  :meth:`drive` groups concurrently-pending
     requests of all machines into one fused call per kind per wave.
+
+    With ``shards > 1`` the state plane is "one resident stack per shard"
+    materialized as shard-aligned blocks of the same stacks: the KV lane
+    axis (and the session axis, when divisible) splits into contiguous
+    blocks placed across a ``"shard"`` device mesh, kernel tiles pad per
+    block (``shard_lanes``), staging/occupancy and registry scatter are
+    accounted per shard — yet one fused receiver/issuer call per wave
+    still *spans every shard* (the partitioned array is a single jit
+    argument), so dispatch count is unchanged from the unsharded engine.
     """
 
     def __init__(self, cfg, n_machines: int = 1, *,
                  use_kernel: bool = False, interpret: bool = True,
-                 block_rows: int = 32, n_keys: int = 8):
+                 block_rows: int = 32, n_keys: int = 8, shards: int = 1):
         self.cfg = cfg
         self.use_kernel = use_kernel
         self.interpret = interpret
         self.block_rows = block_rows
+        self.shards = max(1, int(shards))
+        # session lanes shard only when the axis divides evenly; the KV
+        # lane axis is kept shard-aligned by the stack itself
+        sess = cfg.sessions_per_machine
+        self.tab_shards = self.shards if sess % self.shards == 0 else 1
         self.kv = PlaneStack(vector.KVTable._fields, KV_DEFAULTS,
-                             max(1, n_machines), max(8, n_keys))
+                             max(1, n_machines), max(8, n_keys),
+                             n_shards=self.shards)
         self.tab = PlaneStack(proposer_vector.ProposerTable._fields,
                               proposer_vector.TABLE_DEFAULTS,
-                              max(1, n_machines), cfg.sessions_per_machine)
+                              max(1, n_machines), sess,
+                              n_shards=self.tab_shards)
+        self.mesh = _shard_mesh(self.shards)
+        if self.mesh is not None:
+            self.kv.set_mesh(self.mesh)
+            self.tab.set_mesh(self.mesh)
         self._machines: Dict[int, object] = {}    # mi -> BatchedMachine
         self._bridges: Dict[int, object] = {}     # mi -> its KVBridge
         self._msg_host: Optional[np.ndarray] = None
         self._rep_host: Optional[np.ndarray] = None
         self._params_key = None
         self._params_dev: Optional[jnp.ndarray] = None
-        self.stats = {"ticks": 0,
+        self.stats = {"ticks": 0, "shards": self.shards,
                       "fused_receiver_calls": 0, "fused_receiver_lanes": 0,
-                      "fused_issuer_calls": 0, "fused_issuer_lanes": 0}
+                      "fused_issuer_calls": 0, "fused_issuer_lanes": 0,
+                      "receiver_shard_lanes": [0] * self.shards,
+                      "issuer_shard_lanes": [0] * self.tab_shards,
+                      "shard_registrations": [0] * self.shards}
+
+    # -- shard steering ------------------------------------------------------
+
+    def kv_shard_map(self) -> ShardMap:
+        """Key→shard steering over the current KV lane axis."""
+        return self.kv.shard_map
+
+    def sess_shard_map(self) -> ShardMap:
+        """Session→shard steering over the issuer lane axis."""
+        return self.tab.shard_map
 
     # -- membership ----------------------------------------------------------
 
@@ -413,6 +580,8 @@ class ClusterEngine:
             br.flush()
         msg_host = self._msg_buffers()
         fields = vector.MsgBatch._fields
+        lps = self.kv.n_lanes // self.shards    # lanes per shard block
+        shard_lanes_stat = self.stats["receiver_shard_lanes"]
         cols: List[List[int]] = []
         s_mi: List[int] = []
         s_key: List[int] = []
@@ -431,13 +600,16 @@ class ClusterEngine:
                     else 0])
                 s_mi.append(mi)
                 s_key.append(msg.key)
+                shard_lanes_stat[msg.key // lps] += 1
         # one vectorized scatter for the whole wave (per-item fancy writes
         # were the staging hotspot)
         msg_host[:, s_mi, s_key] = np.array(cols, I32).T
         out_kv, out_rep, out_mask = _fused_receiver_step(
             self.kv.push(), jnp.asarray(msg_host),
             use_kernel=self.use_kernel, interpret=self.interpret,
-            block_rows=self.block_rows)
+            block_rows=self.block_rows,
+            shard_lanes=lps if self.shards > 1 else None,
+            out_sharding=self.kv.device_sharding())
         self.kv.absorb(out_kv)
         for br in self._bridges.values():
             br.drop_views()              # stale against the new stack
@@ -445,16 +617,25 @@ class ClusterEngine:
         mask_np = np.asarray(out_mask)
         results: Dict[int, Dict[str, np.ndarray]] = {}
         self.stats["fused_receiver_calls"] += 1
+        reg_stat = self.stats["shard_registrations"]
         for mach, batch in requests:
             mi = mach._mi
             committed = mach.registry.committed
             for msg in batch:
-                # host mirror of ops.scatter_register (max, OOB dropped)
+                # host mirror of ops.scatter_register (max, OOB dropped).
+                # This is the cross-shard registry scatter: a registration
+                # born in one shard's lane block max-merges into the
+                # machine-global registry that every shard's gather reads
+                # next wave, with the owning shard journaled in the
+                # bridge's per-shard mirror.
                 if mask_np[mi, msg.key]:
                     gs = msg.rmw_id.gsess
-                    if 0 <= gs < len(committed) \
-                            and msg.rmw_id.counter > committed[gs]:
-                        committed[gs] = msg.rmw_id.counter
+                    cnt = msg.rmw_id.counter
+                    if 0 <= gs < len(committed) and cnt > committed[gs]:
+                        committed[gs] = cnt
+                    shard = msg.key // lps
+                    mach.kvs.note_registration(shard, gs, cnt)
+                    reg_stat[shard] += 1
             self.stats["fused_receiver_lanes"] += len(batch)
             results[id(mach)] = {f: rep_np[i, mi] for i, f
                                  in enumerate(vector.ReplyBatch._fields)}
@@ -466,6 +647,8 @@ class ClusterEngine:
         """requests: [(machine, [(lane, Reply),...]), ...] — one call."""
         rep_host = self._rep_buffers()
         fields = proposer_vector.IssuerReplyBatch._fields
+        lps = self.tab.n_lanes // self.tab_shards
+        shard_lanes_stat = self.stats["issuer_shard_lanes"]
         cols: List[List[int]] = []
         s_mi: List[int] = []
         s_lane: List[int] = []
@@ -476,11 +659,14 @@ class ClusterEngine:
                 cols.append([vals[f] for f in fields])
                 s_mi.append(mi)
                 s_lane.append(lane)
+                shard_lanes_stat[lane // lps] += 1
         rep_host[:, s_mi, s_lane] = np.array(cols, I32).T
         out_tab, out_act = _fused_issuer_step(
             self.tab.push(), jnp.asarray(rep_host), self._params(),
             use_kernel=self.use_kernel, interpret=self.interpret,
-            block_rows=self.block_rows)
+            block_rows=self.block_rows,
+            shard_lanes=lps if self.tab_shards > 1 else None,
+            out_sharding=self.tab.device_sharding())
         self.tab.absorb(out_tab)
         act_np = np.asarray(out_act)
         results: Dict[int, Dict[str, np.ndarray]] = {}

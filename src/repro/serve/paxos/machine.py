@@ -42,7 +42,6 @@ this subsystem is tested against (``tests/test_serve_paxos.py``,
 
 from __future__ import annotations
 
-import dataclasses
 from collections import deque
 from typing import Deque, Dict, List, Optional, Tuple
 
@@ -73,11 +72,12 @@ class BatchedMachine(Machine):
                  incarnation: int = 0, view: Optional[View] = None, *,
                  use_kernel: bool = False, interpret: bool = True,
                  block_rows: int = 32, batch_target: Optional[int] = None,
-                 engine: Optional[ClusterEngine] = None):
+                 engine: Optional[ClusterEngine] = None, shards: int = 1):
         super().__init__(mid, cfg, send, now, incarnation, view=view)
         self.use_kernel = use_kernel
         self.interpret = interpret
         self.block_rows = block_rows
+        self.shards = max(1, int(shards))
         self.batch_target = (DEFAULT_BATCH_TARGET if batch_target is None
                              else batch_target)
         # Engine binding: row `mid` of the (shared or private) plane
@@ -87,13 +87,19 @@ class BatchedMachine(Machine):
         if engine is None:
             engine = ClusterEngine(cfg, mid + 1, use_kernel=use_kernel,
                                    interpret=interpret,
-                                   block_rows=block_rows)
+                                   block_rows=block_rows,
+                                   shards=self.shards)
         self._engine = engine
         self._mi = mid
         # authoritative receiver state = this machine's row of the stacked
         # KV planes, checked out through the bridge
         self.kvs = bridge.KVBridge(stack=engine.kv, mi=self._mi)
-        self.steering = bridge.SteeringTable(cfg.sessions_per_machine, mid)
+        # session→shard steering rides the lid table: the shard map names
+        # which ProposerTable shard block each session lane folds into
+        self.steering = bridge.SteeringTable(
+            cfg.sessions_per_machine, mid,
+            shard_map=(engine.sess_shard_map()
+                       if engine.tab_shards > 1 else None))
         engine.adopt(self)
         # message ingest: strict order keeps the batched execution
         # oracle-exact (see scheduler docstring); one persistent instance
@@ -105,7 +111,8 @@ class BatchedMachine(Machine):
         # round, so with majority >= 2 they can never decide alone
         self._notes: Deque[Tuple[int, Reply]] = deque()
         self.engine_stats = {"receiver_batches": 0, "receiver_lanes": 0,
-                             "issuer_batches": 0, "issuer_lanes": 0}
+                             "issuer_batches": 0, "issuer_lanes": 0,
+                             "receiver_shard_lanes": [0] * self.shards}
 
     @classmethod
     def attach_engine(cls, machines) -> ClusterEngine:
@@ -118,7 +125,8 @@ class BatchedMachine(Machine):
         eng = ClusterEngine(first.cfg, len(machines),
                             use_kernel=first.use_kernel,
                             interpret=first.interpret,
-                            block_rows=first.block_rows)
+                            block_rows=first.block_rows,
+                            shards=first.shards)
         for m in machines:
             eng.adopt(m)
         return eng
@@ -244,14 +252,38 @@ class BatchedMachine(Machine):
 
     def _receiver_flush(self, run: List[Msg],
                         out: List[Tuple[int, Reply]]):
+        # per-item bookkeeping hoisted out of the admit loop: one _now()
+        # per run (sim time is constant within a tick), one trace-tap
+        # lookup, one lane-growth ensure() for the run's max key, and the
+        # scheduler's counters batched via offer_many
+        now = self._now()
+        last_heard = self.last_heard
+        trace = self.msg_trace
+        bump = self.bump
+        max_key = -1
         for msg in run:
-            self.last_heard[msg.src] = self._now()
-            self.bump(f"recv_{msg.kind.name.lower()}")
-            if self.msg_trace is not None:
-                self.msg_trace.append(dataclasses.replace(msg))
-            self.kvs.ensure(msg.key)
-            self.ingest.offer(msg)
-        for batch in self.ingest.drain():
+            last_heard[msg.src] = now
+            bump(f"recv_{msg.kind.name.lower()}")
+            if trace is not None:
+                trace.append(msg.clone())
+            if msg.key > max_key:
+                max_key = msg.key
+        if max_key >= 0:
+            self.kvs.ensure(max_key)
+        self.ingest.offer_many(run)
+        if self.shards > 1:
+            # one emission pass yields the batch AND its per-shard
+            # sub-batches (disjoint plane blocks); the wave still runs as
+            # one fused call spanning shards
+            drained = self.ingest.drain_sharded(self.kvs.shard_map)
+        else:
+            drained = ((batch, None) for batch in self.ingest.drain())
+        for batch, per_shard in drained:
+            if per_shard is not None:
+                shard_stat = self.engine_stats["receiver_shard_lanes"]
+                for s, sub in enumerate(per_shard):
+                    if sub:
+                        shard_stat[s] += len(sub)
             # rep_np: field -> this machine's per-key reply row views
             rep_np = yield ("recv", batch)
             for msg in batch:
@@ -265,7 +297,7 @@ class BatchedMachine(Machine):
                                         msg.value, msg.base_ts,
                                         get_kv(self.kvs, msg.key),
                                         val_log=msg.val_log)
-                self.bump(f"rep_{rep.opcode.name.lower()}")
+                bump(f"rep_{rep.opcode.name.lower()}")
                 out.append((msg.src, rep))
             self.engine_stats["receiver_batches"] += 1
             self.engine_stats["receiver_lanes"] += len(batch)
@@ -470,8 +502,13 @@ class BatchedMachine(Machine):
         installed = super()._install_view(view)
         if installed:
             # lid routing survives a view change (lids are machine-local),
-            # but the steering table tracks the epoch for observability
-            self.steering.remap(self.view.epoch)
+            # but the steering table tracks the epoch for observability —
+            # and, sharded, re-checks that no live lane's session→shard
+            # steering moved (a foreign-shard move raises loudly)
+            self.steering.remap(
+                self.view.epoch,
+                shard_map=(self._engine.sess_shard_map()
+                           if self._engine.tab_shards > 1 else None))
         return installed
 
     def _retire(self) -> None:

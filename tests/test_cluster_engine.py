@@ -109,3 +109,148 @@ def test_donated_tick_preserves_scalar_identity():
     assert sc.run_until_quiet(max_ticks=50_000)
     assert ba.run_until_quiet(max_ticks=50_000)
     assert completion_tuples(sc) == completion_tuples(ba)
+
+
+# ---------------------------------------------------------------------------
+# sharded plane layout: the same contracts, shard block by shard block
+# ---------------------------------------------------------------------------
+
+import functools  # noqa: E402
+
+from repro.core.lanes import ShardMap  # noqa: E402
+from repro.serve.paxos import SteeringTable  # noqa: E402
+
+
+def _sharded_cluster(seed=11, shards=2, **kw):
+    mcls = functools.partial(BatchedMachine, shards=shards, **kw)
+    cl = Cluster(ProtocolConfig(**CFG), NetConfig(seed=seed),
+                 machine_cls=mcls)
+    workload(cl, n_ops=24, keys=4, seed=seed, rmw_frac=0.5, write_frac=0.3)
+    return cl
+
+
+@pytest.mark.parametrize("shards", (1, 2, 4))
+def test_sharded_scalar_identity(shards):
+    """The sharded batched cluster completes the scalar cluster's exact
+    op stream at every shard count (shards=1 pins that the sharded code
+    path degenerates to the classic layout)."""
+    from repro.core.node import Machine
+
+    sc = Cluster(ProtocolConfig(**CFG), NetConfig(seed=11),
+                 machine_cls=Machine)
+    workload(sc, n_ops=24, keys=4, seed=11, rmw_frac=0.5, write_frac=0.3)
+    ba = _sharded_cluster(seed=11, shards=shards)
+    assert sc.run_until_quiet(max_ticks=50_000)
+    assert ba.run_until_quiet(max_ticks=50_000)
+    assert completion_tuples(sc) == completion_tuples(ba)
+    eng = ba.machines[0]._engine
+    assert eng.stats["shards"] == shards
+    if shards > 1:
+        assert sum(eng.stats["receiver_shard_lanes"]) \
+            == eng.stats["fused_receiver_lanes"]
+
+
+@pytest.mark.parametrize("shards", (2, 4))
+@pytest.mark.parametrize("use_kernel", (False, True))
+def test_sharded_donation_safety_per_shard(shards, use_kernel):
+    """Lockstep twins with a sharded plane: after every tick each shard's
+    lane block must match bit for bit (a read-after-donate — or a kernel
+    segment bleeding across a shard boundary — desynchronizes them)."""
+    kw = dict(use_kernel=True, block_rows=1) if use_kernel else {}
+    a = _sharded_cluster(shards=shards, **kw)
+    b = _sharded_cluster(shards=shards, **kw)
+    ticks = 30 if use_kernel else 60
+    for tick in range(ticks):
+        a.step()
+        b.step()
+        kv_a, tab_a = _checkout(a.engine)
+        kv_b, tab_b = _checkout(b.engine)
+        sm = a.engine.kv.shard_map
+        for s in range(shards):
+            sl = sm.slice_of(s)
+            np.testing.assert_array_equal(
+                kv_a[:, :, sl], kv_b[:, :, sl],
+                err_msg=f"tick {tick} kv shard {s}")
+        np.testing.assert_array_equal(tab_a, tab_b,
+                                      err_msg=f"tick {tick} tab")
+    assert completion_tuples(a) == completion_tuples(b)
+
+
+def test_sharded_checkpoint_roundtrip(tmp_path):
+    """Per-shard plane serialization round-trips bit for bit, and a
+    checkpoint written at shards=4 restores into a scalar layout (and
+    vice versa) — the shard split is a storage layout, not a schema."""
+    cl = _sharded_cluster(shards=4)
+    for _ in range(25):
+        cl.step()
+    kv, tab = _checkout(cl.engine)
+    tree = {"kv": kv, "tab": tab}
+    assert store.save(str(tmp_path), "run_s", 1, tree, shards=4)
+
+    # the npz really holds per-shard lane blocks
+    import os
+    data = np.load(os.path.join(str(tmp_path), "run_s", "step_00000001",
+                                "shards.npz"))
+    assert "kv@shard0" in data and "kv@shard3" in data and "kv" not in data
+    sm = cl.engine.kv.shard_map
+    for s in range(4):
+        np.testing.assert_array_equal(data[f"kv@shard{s}"],
+                                      kv[:, :, sm.slice_of(s)])
+
+    # restore is layout-agnostic: same tree back, bit for bit
+    got, step = store.restore(str(tmp_path), "run_s", like=tree, step=1)
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(got["kv"]), kv)
+    np.testing.assert_array_equal(np.asarray(got["tab"]), tab)
+
+    # and an unsharded save restores identically too
+    assert store.save(str(tmp_path), "run_u", 1, tree)
+    got_u, _ = store.restore(str(tmp_path), "run_u", like=tree, step=1)
+    np.testing.assert_array_equal(np.asarray(got_u["kv"]), kv)
+
+
+def test_foreign_shard_checkout_raises():
+    """A ShardedKVView checkout of a key steered to another shard is a
+    loud ValueError, read and write alike."""
+    cl = _sharded_cluster(shards=2)
+    for _ in range(10):
+        cl.step()
+    mach = cl.machines[0]
+    sm = mach.kvs.shard_map
+    foreign = sm.lanes_per_shard          # first key of shard 1
+    view = mach.kvs.shard_view(0)
+    with pytest.raises(ValueError, match="foreign plane block"):
+        view[foreign]
+    with pytest.raises(ValueError, match="foreign plane block"):
+        view[foreign] = mach.kvs[foreign]
+    assert foreign not in view
+    assert (foreign - 1) in view
+    # the owning shard's view checks out normally
+    assert mach.kvs.shard_view(1)[foreign] is not None
+    with pytest.raises(ValueError):
+        mach.kvs.shard_view(9)
+
+
+def test_steering_remap_foreign_shard_raises():
+    """A view remap whose shard map would move a *live* session lane to a
+    foreign shard raises; moving only idle lanes is allowed."""
+    table = SteeringTable(4, mid=0, shard_map=ShardMap(2, 4))
+    table.register(3, lid=(7 << 16) | 3)
+    # same layout: fine (live lane 3 stays in shard 1)
+    table.remap(1, shard_map=ShardMap(2, 4))
+    assert table.epoch == 1
+    # 4-way layout moves lane 3 from shard 1 to shard 3: live -> loud
+    with pytest.raises(ValueError, match="live session lane 3"):
+        table.remap(2, shard_map=ShardMap(4, 4))
+    # an idle lane may move freely
+    idle = SteeringTable(4, mid=0, shard_map=ShardMap(2, 4))
+    idle.remap(1, shard_map=ShardMap(4, 4))
+    assert idle.shard_map.n_shards == 4
+
+
+def test_steering_table_shard_of():
+    table = SteeringTable(4, mid=0, shard_map=ShardMap(2, 4))
+    assert table.shard_of((1 << 16) | 0) == 0
+    assert table.shard_of((1 << 16) | 3) == 1
+    assert table.shard_of((1 << 16) | 9) is None     # unroutable lane
+    assert SteeringTable(4).shard_of(2) is None      # unsharded
