@@ -30,6 +30,12 @@ seeded schedule, with a completions-identical assertion.
 with a kernel-vs-oracle equality check — wired into scripts/check.sh —
 and writes the results as machine-readable JSON (``BENCH_smoke.json`` by
 default; uploaded as a CI artifact to seed the perf trajectory).
+
+This file owns the engine/e2e lane family (``throughput``,
+``op_classes``, ``issuer``, ``e2e``, ``e2e_sharded``, ``reconfig``);
+``bench_open_loop.py`` merges the ``open_loop`` tail-latency lane into
+the same smoke file afterwards.  Every lane's schema, gating rule and
+caveats are documented in ``docs/benchmarks.md``.
 """
 
 from __future__ import annotations

@@ -10,11 +10,19 @@ python -m pytest -q "$@"
 # benchmarks/bench_vector.py); writes BENCH_smoke.json, which CI uploads
 # as the perf-trajectory artifact (.github/workflows/ci.yml)
 python benchmarks/bench_vector.py --smoke
+# Open-loop tail-latency smoke: seeded Zipf/Poisson traffic through
+# crash + partition faults, p50/p99/p999 per op class split into
+# steady-state vs fault windows, batched==scalar asserted; merges the
+# open_loop lane into BENCH_smoke.json and appends its own trajectory
+# row (see benchmarks/bench_open_loop.py, docs/benchmarks.md)
+python benchmarks/bench_open_loop.py --smoke
 # Perf-regression guard: the fresh smoke e2e batched/scalar ratio must
-# stay within 20% of the last tracked trajectory entry (skips cleanly
-# when no comparable baseline exists yet; --exclude-last 1 because the
-# smoke run above just appended its own row)
-python scripts/perf_guard.py --exclude-last 1
+# stay within 20% of the last tracked trajectory entry, and the
+# open_loop steady-state p99 (virtual ticks, seed-deterministic) within
+# 10% of its baseline (skips cleanly when no comparable baseline exists
+# yet; --exclude-last 2 because the two smoke runs above each appended
+# their own trajectory row)
+python scripts/perf_guard.py --exclude-last 2
 # Batched-cluster smoke: >= 20 seeded faulty workloads (crash/restart and
 # all-aboard included) on Cluster(machine_cls=BatchedMachine), asserting
 # completions identical to the scalar cluster + linearizability checkers
@@ -25,6 +33,12 @@ python scripts/batched_smoke.py
 # register, scalar vs batched completion-identical, view-transition +
 # linearizability checkers green (see scripts/reconfig_smoke.py)
 python scripts/reconfig_smoke.py
+# Open-loop harness smoke: 20 seeded open-loop workloads through
+# crash/partition fault plans, linearizability green, a batched subset
+# completion-identical to scalar (see scripts/open_loop_smoke.py)
+python scripts/open_loop_smoke.py
+# Docs hygiene: every relative link in docs/ and ROADMAP.md resolves
+python scripts/check_links.py
 # Lint gate (mirrors CI's lint job); skipped when ruff isn't installed
 if command -v ruff >/dev/null 2>&1; then
   ruff check .

@@ -1,0 +1,68 @@
+#!/usr/bin/env python
+"""Docs link checker: fail on dead relative links (CI gate).
+
+Scans every markdown file under ``docs/`` plus ``ROADMAP.md`` for inline
+links and images (``[text](target)`` / ``![alt](target)``) and fails when
+a *relative* target does not exist on disk — the docs cross-reference each
+other, the ROADMAP and source files, and a rename that orphans a link
+should break the build, not a reader.
+
+External targets (``http(s)://``, ``mailto:``) are deliberately not
+fetched — CI must not flake on the network.  Pure-fragment links (``#…``)
+are skipped; a ``path#fragment`` target is checked for the *path* only
+(anchor slugs are renderer-specific).  Targets are resolved relative to
+the file containing the link.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+# inline links/images; [text](target "title") tolerated
+_LINK = re.compile(r"!?\[[^\]]*\]\(\s*<?([^)\s>]+)>?(?:\s+\"[^\"]*\")?\s*\)")
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def targets(md_path: pathlib.Path):
+    text = md_path.read_text(encoding="utf-8")
+    # fenced code blocks hold example syntax, not navigable links
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    for m in _LINK.finditer(text):
+        yield m.group(1)
+
+
+def check_file(md_path: pathlib.Path) -> list:
+    dead = []
+    for target in targets(md_path):
+        if target.startswith(_EXTERNAL) or target.startswith("#"):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        if not (md_path.parent / path).exists():
+            dead.append((target, md_path))
+    return dead
+
+
+def main() -> int:
+    root = pathlib.Path(__file__).resolve().parent.parent
+    files = sorted((root / "docs").glob("**/*.md")) + [root / "ROADMAP.md"]
+    checked = 0
+    dead = []
+    for f in files:
+        if f.exists():
+            dead += check_file(f)
+            checked += 1
+    for target, src in dead:
+        print(f"check_links: dead link {target!r} in "
+              f"{src.relative_to(root)}", file=sys.stderr)
+    if dead:
+        return 1
+    print(f"check_links OK: {checked} files, no dead relative links")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

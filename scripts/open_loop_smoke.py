@@ -1,0 +1,99 @@
+#!/usr/bin/env python
+"""Open-loop harness smoke: 20 seeded faulty workloads (CI gate).
+
+Every seed drives :class:`repro.serve.loadgen.OpenLoopHarness` — Poisson
+open-loop arrivals, Zipf key skew, a §2-style op mix — through a fault
+plan (crash/restart on some seeds, a partition on others, both on a few)
+on the scalar cluster, asserting quiescence and **every safety checker**
+in :mod:`repro.core.checkers` green (per-key log agreement, exactly-once,
+prefix, registry monotonicity, carstamp linearizability — the fault-window
+latencies must come from legal histories or they measure nothing).
+
+A subset of seeds additionally runs the identical spec through
+``Cluster(machine_cls=BatchedMachine)`` and asserts the batched run is
+completion-for-completion identical to the scalar one — the open-loop
+injection path (mid-tick arrivals routed by liveness) is a different
+driver than the preloaded-FIFO workloads ``batched_smoke.py`` uses, so it
+gets its own differential gate.
+
+Wired into scripts/check.sh after the reconfig smoke; see
+.github/workflows/ci.yml (open_loop job).
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+from repro.core.sim import completion_tuples
+from repro.serve.loadgen import (
+    ArrivalPhase, FaultPlan, MIXES, OpenLoopHarness, OpenLoopSpec,
+)
+from repro.serve.paxos import BatchedMachine
+
+SEEDS = range(20)
+CRASH_SEEDS = frozenset((1, 4, 7, 10, 13, 16, 19))
+PARTITION_SEEDS = frozenset((2, 5, 8, 11, 14, 17))
+# both faults overlapping the same run
+STORM_SEEDS = frozenset((3, 9, 15))
+# differential subset: same spec through the batched serve path,
+# completion-identical to the scalar run (kept small — the batched tick
+# is host-dispatch-bound at smoke shapes)
+BATCHED_SEEDS = frozenset((0, 7, 14))
+MIX_ROTATION = tuple(MIXES)
+
+
+def spec_for(seed: int) -> OpenLoopSpec:
+    mix = MIXES[MIX_ROTATION[seed % len(MIX_ROTATION)]]
+    return OpenLoopSpec(
+        seed=seed, n_machines=5, sessions=2, n_keys=48,
+        zipf_s=0.8 + 0.05 * (seed % 5), mix=mix,
+        phases=(ArrivalPhase(rate=0.25, ticks=160),),
+        drop_prob=0.02, dup_prob=0.02)
+
+
+def faults_for(seed: int) -> FaultPlan:
+    plan = FaultPlan(settle=30.0)
+    if seed in CRASH_SEEDS or seed in STORM_SEEDS:
+        plan.crash_restart(seed % 5, at=40.0, down_for=25.0)
+    if seed in PARTITION_SEEDS or seed in STORM_SEEDS:
+        plan.partition(90.0, 120.0, (0, 1, 2), (3, 4))
+    return plan
+
+
+def main() -> int:
+    t0 = time.time()
+    total = fault_total = 0
+    for seed in SEEDS:
+        spec, faults = spec_for(seed), faults_for(seed)
+        res = OpenLoopHarness(spec, faults=faults).run()  # check=True:
+        # checkers (linearizability included) ran on the final history
+        report = res.recorder.report()
+        n_fault = sum(s["count"] for s in report["fault"].values() if s)
+        total += res.completed
+        fault_total += n_fault
+        if seed in BATCHED_SEEDS:
+            bat = OpenLoopHarness(spec, machine_cls=BatchedMachine,
+                                  faults=faults).run()
+            want = completion_tuples(res.cluster)
+            got = completion_tuples(bat.cluster)
+            if want != got:
+                print(f"seed {seed}: batched open-loop run diverged "
+                      f"({len(got)} vs {len(want)} completions)",
+                      file=sys.stderr)
+                return 1
+        mode = ("storm" if seed in STORM_SEEDS
+                else "crash" if seed in CRASH_SEEDS
+                else "part" if seed in PARTITION_SEEDS else "plain")
+        diff = "+batched" if seed in BATCHED_SEEDS else ""
+        print(f"seed {seed:2d} [{mode:5s}/{spec.mix.name:12s}]{diff:9s}: "
+              f"{res.completed:3d} done ({n_fault:3d} in fault windows), "
+              f"{res.lost} lost, checkers green")
+    print(f"open-loop smoke OK: {len(list(SEEDS))} seeds, {total} client "
+          f"ops ({fault_total} through fault windows), linearizability "
+          f"green ({time.time() - t0:.1f}s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

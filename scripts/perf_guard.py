@@ -28,6 +28,15 @@ Rules:
 * Ratios (batched / scalar ops/s) are compared rather than absolute
   ops/s so the guard is stable across same-shaped hosts of different
   speeds — the scalar cluster on the same box is the control.
+
+The guard additionally gates the **open_loop lane** when present
+(``benchmarks/bench_open_loop.py --smoke``): steady-state p99 per op
+class, measured in *virtual ticks* — a deterministic function of the seed
+and the protocol code, so host metadata does not apply and the ceiling is
+tight (``--latency-tolerance``, default 10%).  The completed-op count must
+not drop below the baseline's at all (losing completions at an unchanged
+offered load means ops stopped finishing).  Missing lane or no baseline
+row carrying the lane -> skip with a note, same philosophy as e2e.
 """
 
 from __future__ import annotations
@@ -66,6 +75,66 @@ def e2e_ratio(record: dict):
         return (batched.get("client_ops_per_s", 0)
                 / scalar["client_ops_per_s"])
     return None
+
+
+def open_loop_gate(record: dict):
+    """The gate block of a record's open_loop lane (steady p99 per op
+    class + completion accounting), or None when the record predates the
+    lane."""
+    lane = record.get("open_loop") or {}
+    gate = lane.get("gate")
+    if not isinstance(gate, dict) or "steady_p99" not in gate:
+        return None
+    return gate
+
+
+def check_open_loop(current: dict, baseline: dict, sha: str,
+                    tolerance: float) -> bool:
+    """True when the fresh open_loop gate holds against the baseline:
+    per-class steady p99 within ``1 + tolerance`` of the baseline's, and
+    completed count not below it.  Virtual-tick latencies are
+    deterministic per seed, so any drift is a protocol change."""
+    ok = True
+    base_p99 = baseline.get("steady_p99", {})
+    for cls, cur in sorted(current.get("steady_p99", {}).items()):
+        base = base_p99.get(cls)
+        if base is None:
+            continue                   # class absent from older baseline
+        ceiling = base * (1.0 + tolerance)
+        verdict = "OK" if cur <= ceiling else "REGRESSION"
+        print(f"perf_guard: open_loop steady p99[{cls}] {cur:.2f} ticks "
+              f"vs baseline {base:.2f}{f' @{sha}' if sha else ''} "
+              f"(ceiling {ceiling:.2f}): {verdict}")
+        ok = ok and cur <= ceiling
+    cur_done, base_done = current.get("completed"), baseline.get("completed")
+    if cur_done is not None and base_done is not None:
+        verdict = "OK" if cur_done >= base_done else "REGRESSION"
+        print(f"perf_guard: open_loop completed {cur_done} vs baseline "
+              f"{base_done}: {verdict}")
+        ok = ok and cur_done >= base_done
+    return ok
+
+
+def last_open_loop_baseline(trajectory_path: str, exclude_last: int = 0):
+    """(gate, git_sha) of the newest trajectory row carrying an open_loop
+    gate, or (None, None).  No host filter: virtual-tick latency is
+    host-independent by construction."""
+    try:
+        with open(trajectory_path) as fh:
+            lines = [ln for ln in fh if ln.strip()]
+    except FileNotFoundError:
+        return None, None
+    if exclude_last:
+        lines = lines[:-exclude_last]
+    for ln in reversed(lines):
+        try:
+            rec = json.loads(ln)
+        except json.JSONDecodeError:
+            continue
+        gate = open_loop_gate(rec)
+        if gate is not None:
+            return gate, rec.get("git_sha", "")
+    return None, None
 
 
 def last_baseline(trajectory_path: str, exclude_last: int = 0,
@@ -107,6 +176,10 @@ def main(argv=None) -> int:
     ap.add_argument("--tolerance", type=float, default=0.20,
                     help="allowed fractional drop below baseline "
                          "(0.20 = fail below 80%% of baseline)")
+    ap.add_argument("--latency-tolerance", type=float, default=0.10,
+                    help="allowed fractional rise of the open_loop "
+                         "steady-state p99 above baseline (virtual ticks "
+                         "are deterministic per seed, so this is tight)")
     ap.add_argument("--exclude-last", type=int, default=0, metavar="N",
                     help="ignore the N newest trajectory rows (use 1 when "
                          "running right after 'bench_vector --smoke', "
@@ -118,13 +191,33 @@ def main(argv=None) -> int:
 
     try:
         with open(args.smoke) as fh:
-            current = e2e_ratio(json.load(fh))
+            smoke = json.load(fh)
     except (FileNotFoundError, json.JSONDecodeError) as exc:
         print(f"perf_guard: cannot read {args.smoke} ({exc})")
         return 1
+    current = e2e_ratio(smoke)
     if current is None:
         print(f"perf_guard: {args.smoke} has no e2e lane — nothing to gate")
         return 1
+
+    # open_loop lane: gate when both sides carry it (the lane is merged in
+    # by bench_open_loop --smoke after bench_vector --smoke; a run that
+    # skipped it, or a history predating it, skips cleanly)
+    ol_ok = True
+    ol_current = open_loop_gate(smoke)
+    if ol_current is None:
+        print(f"perf_guard: {args.smoke} has no open_loop lane — skipping "
+              "the latency gate")
+    else:
+        ol_base, ol_sha = last_open_loop_baseline(args.trajectory,
+                                                  args.exclude_last)
+        if ol_base is None:
+            print("perf_guard: no open_loop baseline in "
+                  f"{args.trajectory}; skipping (current steady p99 "
+                  f"{ol_current.get('steady_p99_all')})")
+        else:
+            ol_ok = check_open_loop(ol_current, ol_base, ol_sha,
+                                    args.latency_tolerance)
 
     host = None if args.any_host else host_metadata()
     baseline, sha = last_baseline(args.trajectory, args.exclude_last,
@@ -136,7 +229,7 @@ def main(argv=None) -> int:
                       f"python {host['python']})")
         print(f"perf_guard: no comparable baseline in {args.trajectory}"
               f"{where}; skipping (current e2e ratio {current:.3f})")
-        return 0
+        return 0 if ol_ok else 1
 
     floor = baseline * (1.0 - args.tolerance)
     verdict = "OK" if current >= floor else "REGRESSION"
@@ -149,6 +242,12 @@ def main(argv=None) -> int:
               "either fix the regression or, if intentional (e.g. a "
               "correctness fix), append a fresh trajectory row explaining "
               "it in the commit.")
+        return 1
+    if not ol_ok:
+        print("perf_guard: open_loop steady-state latency regressed — "
+              "virtual-tick percentiles are seed-deterministic, so this "
+              "is a protocol-behavior change; fix it or, if intentional, "
+              "append a fresh trajectory row explaining it in the commit.")
         return 1
     return 0
 

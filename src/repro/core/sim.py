@@ -191,6 +191,7 @@ class Cluster:
         tag = next(self._tag)
         req.tag = tag
         self._inflight[tag] = {
+            "tag": tag,
             "key": req.key, "kind": req.kind, "mid": mid, "sess": sess,
             "invoke": self.network.now, "op": req.op,
             "arg1": req.arg1, "arg2": req.arg2, "wval": req.value,

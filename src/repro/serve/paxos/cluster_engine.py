@@ -29,6 +29,12 @@ restructures the serve stack around *residency*:
   registry scatter, wire I/O — runs between waves through the unchanged
   scalar paths.
 
+This module is the code behind ``docs/serve_architecture.md`` — *wave*,
+*plane stack*, *residency* and the *donation contract* are used there
+exactly as defined above; the tracked numbers this architecture is
+measured by (e2e ratio, occupancy, the open-loop tail-latency lane) are
+documented in ``docs/benchmarks.md``.
+
 Why fused waves preserve completion-for-completion identity
 ===========================================================
 

@@ -493,6 +493,10 @@ class BatchedMachine(Machine):
     def crash(self) -> None:
         super().crash()
         self._notes.clear()
+        # crash-stop hygiene: offered-but-undrained ingest (e.g. a
+        # drain_sharded generator abandoned mid-wave) dies with the inbox,
+        # and a dead machine must not report stale backlog/aging gauges
+        self.ingest.reset()
 
     # =================================================================
     # live reconfiguration hooks

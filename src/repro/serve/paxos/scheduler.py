@@ -36,6 +36,18 @@ Both modes are single-pass O(n): conflict bookkeeping uses generation
 stamps, so opening a new batch is O(1) — no per-flush set/dict rebuilding
 (the pre-subsystem ``replay.bucket_conflict_free`` re-allocated both on
 every flush).
+
+**Observability.**  The scheduler exposes live queue gauges for the
+open-loop workload harness (``docs/workloads.md``): :meth:`IngestScheduler.
+gauges` reports ``queue_depth`` (items pending), ``keys_backlogged``
+(distinct keys with a non-empty queue — the fan-out the next emission pass
+faces) and ``oldest_age`` (how many admissions ago the oldest pending item
+arrived — the scheduler-aging signal the fairness mode bounds).  An
+optional :attr:`~IngestScheduler.gauge_hook` fires with that snapshot after
+every emitted batch for in-situ sampling.  :meth:`IngestScheduler.reset`
+clears all queued state (crash-stop semantics: a machine's staged ingest
+dies with its inbox) while the cumulative ``stats`` counters survive — see
+``BatchedMachine.crash``.
 """
 
 from __future__ import annotations
@@ -98,8 +110,11 @@ class IngestScheduler:
         self._heads: List = []
         self._seq = 0
         self._pending = 0
+        self._backlogged = 0             # keys with a non-empty queue
         self.stats = {"offered": 0, "emitted": 0, "batches": 0,
                       "conflict_deferrals": 0}
+        # observer called with gauges() after every emitted batch
+        self.gauge_hook: Optional[Callable[[Dict[str, int]], None]] = None
 
     # -- ingest ---------------------------------------------------------------
 
@@ -119,6 +134,7 @@ class IngestScheduler:
             q = self._queues[key] = deque()
         if not q:
             heapq.heappush(self._heads, (self._seq, key))
+            self._backlogged += 1
         q.append((self._seq, item))
         self._seq += 1
         self._pending += 1
@@ -135,6 +151,7 @@ class IngestScheduler:
         lane = self._lane
         seq = self._seq
         n = 0
+        newly = 0
         for item in items:
             key = lane(item)
             q = queues.get(key)
@@ -142,15 +159,53 @@ class IngestScheduler:
                 q = queues[key] = deque()
             if not q:
                 heapq.heappush(heads, (seq, key))
+                newly += 1
             q.append((seq, item))
             seq += 1
             n += 1
         self._seq = seq
         self._pending += n
+        self._backlogged += newly
         self.stats["offered"] += n
 
     def pending(self) -> int:
         return self._pending
+
+    # -- observability --------------------------------------------------------
+
+    def gauges(self) -> Dict[str, int]:
+        """Live queue gauges: ``queue_depth`` (pending items),
+        ``keys_backlogged`` (keys with a non-empty queue) and
+        ``oldest_age`` (admissions since the oldest pending item arrived
+        — 0 when idle).  O(stale heap entries), usually O(1)."""
+        heads = self._heads
+        # lazily discard stale heap entries so the age reading is live
+        while heads:
+            seq, key = heads[0]
+            q = self._queues.get(key)
+            if q and q[0][0] == seq:
+                break
+            heapq.heappop(heads)
+        oldest = (self._seq - heads[0][0]) if heads else 0
+        return {"queue_depth": self._pending,
+                "keys_backlogged": self._backlogged,
+                "oldest_age": oldest}
+
+    def reset(self) -> None:
+        """Drop all queued state — crash-stop hygiene.
+
+        An abandoned :meth:`drain_sharded` / :meth:`drain` generator (the
+        machine crashed mid-wave, or the engine aborted mid-tick) leaves
+        offered-but-unemitted items queued; a restarted incarnation must
+        not replay them, and a crashed machine must not keep reporting
+        stale backlog to gauge observers.  Cumulative ``stats`` survive
+        (they describe history, not state); the admission sequence keeps
+        counting so ``oldest_age`` stays monotone for observers.
+        """
+        self._queues.clear()
+        self._heads.clear()
+        self._pending = 0
+        self._backlogged = 0
 
     # -- emission -------------------------------------------------------------
 
@@ -159,6 +214,8 @@ class IngestScheduler:
         _seq, item = q.popleft()
         if q:
             heapq.heappush(self._heads, (q[0][0], key))
+        else:
+            self._backlogged -= 1
         self._pending -= 1
         return item
 
@@ -228,6 +285,8 @@ class IngestScheduler:
         if batch:
             self.stats["batches"] += 1
             self.stats["emitted"] += len(batch)
+            if self.gauge_hook is not None:
+                self.gauge_hook(self.gauges())
         return batch, shards
 
     def drain(self) -> Iterator[List[object]]:

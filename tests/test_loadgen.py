@@ -1,0 +1,222 @@
+"""Loadgen data-layer tests: quantile sketch, Zipf keys, arrivals.
+
+The hypothesis properties here back the two written guarantees the
+open-loop methodology rests on (``docs/workloads.md``):
+
+* the sketch's rank-error bound against a sorted oracle —
+  ``q <= quantile(p) <= q * (1 + 2**-sub_bits)`` for true quantile
+  ``q >= 1`` — plus lossless merging; and
+* Zipfian generator determinism: the same ``(n_keys, s, seed)`` yields
+  the same key sequence everywhere (the smoke seeds and the
+  scalar-vs-batched identity gates rest on it), including derived
+  per-shard/per-phase streams.
+"""
+
+from __future__ import annotations
+
+import math
+
+import pytest
+
+from repro.serve.loadgen import (
+    ArrivalPhase, MIXES, OpMix, QuantileSketch, ZipfKeys, arrival_times,
+)
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAVE_HYPOTHESIS = True
+except ImportError:                                  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS,
+    reason="loadgen property tests need hypothesis (pip install -r "
+           "requirements-dev.txt)")
+
+
+# ---------------------------------------------------------------------------
+# quantile sketch
+# ---------------------------------------------------------------------------
+
+def sorted_oracle(values, p):
+    """The true p-quantile: the ceil(p*n)-th smallest recorded value."""
+    ordered = sorted(values)
+    return ordered[max(1, math.ceil(p * len(ordered))) - 1]
+
+
+def test_sketch_empty_and_validation():
+    sk = QuantileSketch()
+    assert math.isnan(sk.quantile(0.5))
+    assert sk.summary() is None
+    with pytest.raises(ValueError):
+        sk.quantile(0.0)
+    with pytest.raises(ValueError):
+        sk.record(-1.0)
+    with pytest.raises(ValueError):
+        QuantileSketch(sub_bits=17)
+
+
+def test_sketch_exact_on_singleton():
+    sk = QuantileSketch()
+    sk.record(42.0)
+    # clamping to the recorded max makes single-value sketches exact
+    assert sk.quantile(0.5) == 42.0
+    assert sk.summary()["count"] == 1
+
+
+def test_sketch_merge_requires_same_resolution():
+    with pytest.raises(ValueError):
+        QuantileSketch(7).merge(QuantileSketch(8))
+
+
+def test_sketch_memory_is_bounded_by_buckets():
+    sk = QuantileSketch(sub_bits=4)
+    for i in range(100_000):
+        sk.record(1.0 + (i % 997) / 10.0)
+    assert sk.count == 100_000
+    assert len(sk._counts) < 200          # sparse dict, not sample count
+
+
+if HAVE_HYPOTHESIS:
+    latencies = st.lists(
+        st.floats(min_value=1.0, max_value=1e9, allow_nan=False,
+                  allow_infinity=False),
+        min_size=1, max_size=300)
+    quantile_ps = st.sampled_from([0.01, 0.25, 0.5, 0.9, 0.99, 0.999, 1.0])
+    sub_bits_s = st.integers(min_value=2, max_value=10)
+
+    @needs_hypothesis
+    @settings(max_examples=200, deadline=None)
+    @given(values=latencies, p=quantile_ps, sub_bits=sub_bits_s)
+    def test_sketch_rank_error_bound_vs_sorted_oracle(values, p, sub_bits):
+        """The documented bound: q <= est <= q * (1 + 2**-sub_bits)."""
+        sk = QuantileSketch(sub_bits)
+        for v in values:
+            sk.record(v)
+        q = sorted_oracle(values, p)
+        est = sk.quantile(p)
+        assert q <= est <= q * (1.0 + sk.relative_error)
+
+    @needs_hypothesis
+    @settings(max_examples=80, deadline=None)
+    @given(a=latencies, b=latencies, p=quantile_ps)
+    def test_sketch_merge_is_lossless(a, b, p):
+        """merge(A, B) answers exactly like one sketch fed A + B."""
+        merged = QuantileSketch()
+        for v in a:
+            merged.record(v)
+        other = QuantileSketch()
+        for v in b:
+            other.record(v)
+        merged.merge(other)
+        combined = QuantileSketch()
+        for v in a + b:
+            combined.record(v)
+        assert merged.count == combined.count
+        assert merged.quantile(p) == combined.quantile(p)
+        assert merged.max == combined.max
+
+
+# ---------------------------------------------------------------------------
+# zipf keys
+# ---------------------------------------------------------------------------
+
+def test_zipf_scatter_is_a_permutation():
+    z = ZipfKeys(97, s=1.0, seed=5, key_base=10)
+    keys = {z._key_of_rank(r) for r in range(97)}
+    assert keys == set(range(10, 107))
+
+
+def test_zipf_skew_concentrates_on_hot_set():
+    z = ZipfKeys(1000, s=1.2, seed=3)
+    draws = z.sample(4000)
+    hot = set(z.hottest(10))
+    hot_frac = sum(k in hot for k in draws) / len(draws)
+    assert hot_frac > 0.4                 # 1% of keys draw >40% of traffic
+
+
+def test_zipf_uniform_at_s_zero():
+    z = ZipfKeys(50, s=0.0, seed=1)
+    draws = z.sample(5000)
+    top = max(draws.count(k) for k in set(draws))
+    assert top < 5000 * 0.1               # no key dominates
+
+
+def test_zipf_validation():
+    with pytest.raises(ValueError):
+        ZipfKeys(0)
+    with pytest.raises(ValueError):
+        ZipfKeys(10, s=-1.0)
+
+
+if HAVE_HYPOTHESIS:
+    universes = st.integers(min_value=1, max_value=5000)
+    seeds = st.integers(min_value=0, max_value=2**31)
+    exponents = st.sampled_from([0.0, 0.5, 0.99, 1.2])
+
+    @needs_hypothesis
+    @settings(max_examples=60, deadline=None)
+    @given(n=universes, s=exponents, seed=seeds)
+    def test_zipf_deterministic_across_instances(n, s, seed):
+        """Same (n_keys, s, seed) => same sequence, in-bounds keys."""
+        a = ZipfKeys(n, s, seed=seed)
+        b = ZipfKeys(n, s, seed=seed)
+        seq = a.sample(40)
+        assert seq == b.sample(40)
+        assert all(0 <= k < n for k in seq)
+
+    @needs_hypothesis
+    @settings(max_examples=60, deadline=None)
+    @given(n=universes, seed=seeds,
+           i=st.integers(min_value=0, max_value=64),
+           j=st.integers(min_value=0, max_value=64))
+    def test_zipf_streams_deterministic_and_distinct(n, seed, i, j):
+        """Derived shard/phase streams replay exactly and differ across
+        indices (same universe, independent sequences)."""
+        z = ZipfKeys(n, 0.99, seed=seed)
+        assert z.stream(i).sample(25) == z.stream(i).sample(25)
+        if i != j and n > 1:
+            # distinct derived seeds; sequences agree only by coincidence
+            assert z.stream(i).seed != z.stream(j).seed
+
+
+# ---------------------------------------------------------------------------
+# arrivals and op mixes
+# ---------------------------------------------------------------------------
+
+def test_arrivals_deterministic_sorted_in_span():
+    phases = (ArrivalPhase(0.5, 100), ArrivalPhase(2.0, 50))
+    a = arrival_times(phases, seed=9)
+    assert a == arrival_times(phases, seed=9)
+    assert a == sorted(a)
+    assert all(0 <= t < 150 for t in a)
+    # the rate-2.0 phase is denser than the rate-0.5 one
+    dense = sum(t >= 100 for t in a)
+    assert dense > sum(t < 100 for t in a)
+
+
+def test_arrivals_differ_across_seeds():
+    phases = (ArrivalPhase(1.0, 50),)
+    assert arrival_times(phases, 1) != arrival_times(phases, 2)
+
+
+def test_phase_and_mix_validation():
+    with pytest.raises(ValueError):
+        ArrivalPhase(0.0, 10)
+    with pytest.raises(ValueError):
+        ArrivalPhase(1.0, 0)
+    with pytest.raises(ValueError):
+        OpMix("bad", rmw=0.8, write=0.3)
+    assert MIXES["read_heavy"].read == pytest.approx(0.90)
+
+
+def test_mix_draw_tracks_probabilities():
+    import random
+
+    from repro.core.node import ReqKind
+    rng = random.Random("mix-test")
+    mix = MIXES["kv_mixed"]
+    draws = [mix.draw(rng) for _ in range(4000)]
+    rmw_frac = sum(k == ReqKind.RMW for k in draws) / len(draws)
+    assert abs(rmw_frac - mix.rmw) < 0.03

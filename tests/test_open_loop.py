@@ -1,0 +1,184 @@
+"""Open-loop harness tests: fault windows, accounting, differential gate.
+
+The heavyweight multi-seed coverage lives in ``scripts/open_loop_smoke.py``
+(20 seeded fault plans, CI); these tests pin the harness *semantics*:
+
+* window classification is by interval overlap (an op delayed by a crash
+  belongs to the fault tail even if it was invoked before it);
+* offered = completed + lost after quiescence, with losses only on
+  crash seeds;
+* the same spec drives the scalar and the batched cluster to identical
+  completions (the open-loop injection path is a different driver than
+  the preloaded-FIFO workloads, so it needs its own differential gate);
+* overload is visible: an offered rate beyond capacity backs up the
+  client FIFOs and the backlog gauge sees it.
+"""
+
+from __future__ import annotations
+
+import pytest
+
+from repro.core import checkers
+from repro.core.node import Machine
+from repro.core.sim import completion_tuples
+from repro.serve.loadgen import (
+    ArrivalPhase, FaultPlan, GaugeLog, LatencyRecorder, MIXES,
+    OpenLoopHarness, OpenLoopSpec, merged_class_summary,
+)
+from repro.core.node import ReqKind
+from repro.serve.paxos import BatchedMachine
+
+
+def small_spec(seed=4, **kw):
+    base = dict(seed=seed, n_machines=5, sessions=2, n_keys=32,
+                mix=MIXES["kv_mixed"],
+                phases=(ArrivalPhase(rate=0.3, ticks=100),))
+    base.update(kw)
+    return OpenLoopSpec(**base)
+
+
+# ---------------------------------------------------------------------------
+# recorder semantics
+# ---------------------------------------------------------------------------
+
+def test_window_classification_is_by_overlap():
+    rec = LatencyRecorder(fault_windows=[(100.0, 200.0)])
+    assert rec.window_of(10, 50) == "steady"       # entirely before
+    assert rec.window_of(250, 260) == "steady"     # entirely after
+    assert rec.window_of(120, 130) == "fault"      # inside
+    assert rec.window_of(90, 110) == "fault"       # invoked before, hit it
+    assert rec.window_of(190, 240) == "fault"      # completed after
+    assert rec.window_of(50, 300) == "fault"       # spans it
+    # boundary: window is [t0, t1) on completes, invokes strictly before t1
+    assert rec.window_of(200, 210) == "steady"
+    assert rec.window_of(90, 99.9) == "steady"
+
+
+def test_recorder_rejects_empty_window():
+    with pytest.raises(ValueError):
+        LatencyRecorder(fault_windows=[(5.0, 5.0)])
+
+
+def test_recorder_routes_op_classes():
+    rec = LatencyRecorder(fault_windows=[(10.0, 20.0)])
+    rec.observe({"kind": ReqKind.RMW, "invoke": 1, "complete": 4})
+    rec.observe({"kind": ReqKind.READ, "invoke": 12, "complete": 15})
+    rep = rec.report()
+    assert rep["steady"]["rmw"]["count"] == 1
+    assert rep["fault"]["read"]["count"] == 1
+    assert rep["steady"]["write"] is None
+    assert merged_class_summary(rec)["count"] == 2
+    assert merged_class_summary(rec, "fault")["count"] == 1
+
+
+def test_gauge_log_aggregates():
+    g = GaugeLog()
+    for v in (1, 5, 3):
+        g.sample("depth", v)
+    g.sample_many({"a": 2.0}, prefix="sched_")
+    s = g.summary()
+    assert s["depth"] == {"max": 5, "mean": 3.0, "last": 3, "samples": 3}
+    assert s["sched_a"]["samples"] == 1
+
+
+# ---------------------------------------------------------------------------
+# fault plans
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_windows_cover_settle():
+    plan = FaultPlan(settle=25.0).crash_restart(2, at=40.0, down_for=10.0)
+    assert plan.windows == [(40.0, 75.0)]
+    assert [e.action for e in plan.sorted_events()] == ["crash", "restart"]
+    plan.partition(100.0, 130.0, (0, 1, 2), (3, 4))
+    assert plan.windows[-1] == (100.0, 155.0)
+    with pytest.raises(ValueError):
+        plan.partition(10.0, 10.0, (0,), (1,))
+
+
+def test_fault_plan_crash_without_restart_window_is_open_ended():
+    plan = FaultPlan().crash(1, at=30.0)
+    (t0, t1), = plan.windows
+    assert t0 == 30.0 and t1 == float("inf")
+
+
+# ---------------------------------------------------------------------------
+# harness end to end
+# ---------------------------------------------------------------------------
+
+def test_faulty_run_accounts_and_checks():
+    faults = (FaultPlan(settle=30.0)
+              .crash_restart(1, at=30.0, down_for=20.0)
+              .partition(60.0, 80.0, (0, 1, 2), (3, 4)))
+    res = OpenLoopHarness(small_spec(), faults=faults).run()
+    assert res.offered == res.completed + res.lost
+    assert res.completed > 0
+    checkers.check_all(res.cluster)       # run() already did; idempotent
+    rep = res.recorder.report()
+    fault_count = sum(s["count"] for s in rep["fault"].values() if s)
+    assert fault_count > 0                # load really ran through faults
+    lane = res.lane()
+    assert lane["windows"]["fault"] == rep["fault"]
+    assert "client_fifo_depth" in lane["gauges"]
+
+
+def test_unfaulted_run_has_empty_fault_cells():
+    res = OpenLoopHarness(small_spec(seed=8)).run()
+    assert res.lost == 0
+    assert all(s is None for s in res.recorder.report()["fault"].values())
+
+
+def test_scalar_and_batched_runs_are_completion_identical():
+    spec = small_spec(seed=6, phases=(ArrivalPhase(rate=0.35, ticks=80),))
+    faults = FaultPlan(settle=20.0).crash_restart(3, at=25.0, down_for=15.0)
+    scal = OpenLoopHarness(spec, Machine, faults).run()
+    bat = OpenLoopHarness(spec, BatchedMachine, faults).run()
+    assert (completion_tuples(scal.cluster)
+            == completion_tuples(bat.cluster))
+    # the batched run exposes the ingest-scheduler gauges
+    assert "sched_queue_depth" in bat.gauges.summary()
+
+
+def test_latency_measured_from_scheduled_arrival():
+    res = OpenLoopHarness(small_spec(seed=2)).run()
+    # every latency >= 1 virtual tick (sub-tick injection rounding is
+    # queueing delay, never negative)
+    summ = merged_class_summary(res.recorder)
+    assert summ["count"] == res.completed
+    assert summ["p50"] >= 1.0
+
+
+def test_overload_backs_up_the_fifos():
+    calm = OpenLoopHarness(small_spec(
+        seed=3, phases=(ArrivalPhase(rate=0.2, ticks=80),))).run()
+    slam = OpenLoopHarness(small_spec(
+        seed=3, sessions=1, phases=(ArrivalPhase(rate=4.0, ticks=80),))).run()
+    calm_fifo = calm.gauges.summary()["client_fifo_depth"]["max"]
+    slam_fifo = slam.gauges.summary()["client_fifo_depth"]["max"]
+    assert slam_fifo > calm_fifo          # open loop: backlog is visible
+    assert (merged_class_summary(slam.recorder)["p99"]
+            > merged_class_summary(calm.recorder)["p99"])
+
+
+def test_million_key_universe_stays_cheap_on_scalar():
+    spec = small_spec(seed=1, n_keys=1_000_000, zipf_s=1.1,
+                      phases=(ArrivalPhase(rate=0.8, ticks=60),))
+    res = OpenLoopHarness(spec).run()
+    keys = {h["key"] for h in res.cluster.history}
+    assert all(0 <= k < 1_000_000 for k in keys)
+    assert len(keys) > 1
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        OpenLoopSpec(reconfig=True, key_base=0)
+    # reconfig with a shifted key range is accepted
+    OpenLoopSpec(reconfig=True, key_base=1)
+
+
+def test_nonquiescent_run_raises():
+    spec = small_spec(seed=5)
+    faults = FaultPlan().crash(0, at=10.0)  # crash-stop, never restarted
+    # the cluster still quiesces (other machines finish); but a tiny
+    # max_ticks must raise rather than return a truncated measurement
+    with pytest.raises(RuntimeError):
+        OpenLoopHarness(spec, faults=faults).run(max_ticks=5)

@@ -189,3 +189,103 @@ if HAVE_HYPOTHESIS:
         for m in trace:
             sched.offer(m)
         assert list(sched.drain()) == bucket_conflict_free(trace)
+
+
+# ---------------------------------------------------------------------------
+# observability: gauges, gauge_hook, reset (crash-stop counter hygiene)
+# ---------------------------------------------------------------------------
+
+def test_gauges_track_queue_state():
+    sched = IngestScheduler(strict_order=True)
+    assert sched.gauges() == {"queue_depth": 0, "keys_backlogged": 0,
+                              "oldest_age": 0}
+    sched.offer(propose(0))
+    sched.offer(propose(1))
+    sched.offer(propose(0))
+    g = sched.gauges()
+    assert g["queue_depth"] == 3
+    assert g["keys_backlogged"] == 2
+    # the oldest pending item was admitted 3 admissions ago
+    assert g["oldest_age"] == 3
+    for _ in sched.drain():
+        pass
+    assert sched.gauges() == {"queue_depth": 0, "keys_backlogged": 0,
+                              "oldest_age": 0}
+
+
+def test_gauges_after_partial_emission():
+    # conflicting items on one key: strict mode emits one per batch
+    sched = IngestScheduler(strict_order=True)
+    for _ in range(4):
+        sched.offer(propose(0))
+    sched.emit()
+    g = sched.gauges()
+    assert g["queue_depth"] == 3
+    assert g["keys_backlogged"] == 1
+    assert g["oldest_age"] == 3          # head arrived 3 admissions back
+
+
+def test_gauge_hook_fires_once_per_emitted_batch():
+    sched = IngestScheduler(strict_order=True)
+    seen = []
+    sched.gauge_hook = seen.append
+    for _ in range(3):
+        sched.offer(propose(0))          # conflicts: three batches
+    sched.offer(propose(1))
+    for _ in sched.drain():
+        pass
+    assert len(seen) == sched.stats["batches"]
+    # snapshots are live readings taken after each batch drained
+    assert seen[-1]["queue_depth"] == 0
+    assert all(s["queue_depth"] >= 0 for s in seen)
+
+
+def test_reset_clears_state_keeps_stats():
+    """Counter-hygiene regression: an abandoned drain_sharded generator
+    (machine crashed mid-wave) must not leave stale backlog behind."""
+    from repro.core.lanes import ShardMap
+
+    sched = IngestScheduler(strict_order=True)
+    for _ in range(3):
+        sched.offer(propose(0))          # same key: one item per batch
+    sched.offer(propose(1))
+    gen = sched.drain_sharded(ShardMap(n_shards=2, n_lanes=8))
+    batch, shards = next(gen)            # consume one batch, then abandon
+    assert batch
+    gen.close()
+    stale = sched.gauges()
+    assert stale["queue_depth"] > 0      # the stale state the bug leaked
+    stats_before = dict(sched.stats)
+    sched.reset()
+    assert sched.gauges() == {"queue_depth": 0, "keys_backlogged": 0,
+                              "oldest_age": 0}
+    assert sched.pending() == 0
+    # cumulative stats describe history and survive the reset
+    assert sched.stats == stats_before
+    # the scheduler stays usable: fresh offers drain normally
+    sched.offer(propose(5))
+    assert [m.key for b in sched.drain() for m in b] == [5]
+
+
+def test_batched_machine_crash_resets_ingest():
+    """Mid-batch crash: staged ingest dies with the inbox, and the dead
+    machine's scheduler reports empty gauges to observers."""
+    from repro.core.node import ProtocolConfig
+    from repro.core.sim import Cluster, NetConfig
+    from repro.serve.paxos import BatchedMachine
+
+    cl = Cluster(ProtocolConfig(n_machines=3, sessions_per_machine=2),
+                 NetConfig(seed=3), machine_cls=BatchedMachine)
+    for s in range(2):
+        cl.rmw(0, s, key=s)
+    cl.step(2)                           # traffic in flight
+    m = cl.machines[1]
+    # stage items as a mid-wave abort would leave them: offered but not
+    # drained when the tick dies
+    m.ingest.offer(propose(0))
+    m.ingest.offer(propose(1, cnt=2))
+    assert m.ingest.gauges()["queue_depth"] == 2
+    cl.crash(1)
+    assert cl.machines[1].ingest.gauges() == {
+        "queue_depth": 0, "keys_backlogged": 0, "oldest_age": 0}
+    assert cl.machines[1].ingest.pending() == 0
