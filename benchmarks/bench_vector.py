@@ -32,7 +32,8 @@ and writes the results as machine-readable JSON (``BENCH_smoke.json`` by
 default; uploaded as a CI artifact to seed the perf trajectory).
 
 This file owns the engine/e2e lane family (``throughput``,
-``op_classes``, ``issuer``, ``e2e``, ``e2e_sharded``, ``reconfig``);
+``op_classes``, ``issuer``, ``e2e``, ``e2e_sharded``, ``reconfig``,
+``obs_overhead`` — the flight-recorder tax at off/sampled/full);
 ``bench_open_loop.py`` merges the ``open_loop`` tail-latency lane into
 the same smoke file afterwards.  Every lane's schema, gating rule and
 caveats are documented in ``docs/benchmarks.md``.
@@ -369,6 +370,58 @@ def bench_e2e(n_ops: int = 300, keys: int = 32, seed: int = 5,
     return rows
 
 
+def bench_obs_overhead(n_ops: int = 400, keys: int = 32, seed: int = 9,
+                       sessions: int = 16, repeats: int = 3):
+    """Observability tax: the identical seeded scalar workload with no
+    recorder attached (the zero-cost default — every hook site is one
+    ``is not None`` branch), with a sampled flight recorder, and with a
+    full-ring recorder.  Completions are asserted identical across the
+    three runs (tracing must never change protocol behavior); the
+    interesting number is ``vs_off`` — the throughput ratio against the
+    untraced baseline.  This lane is recorded for trend-watching, not
+    gated by ``perf_guard`` (the e2e/open_loop ceilings already pin the
+    default-off configuration).
+    """
+    from repro.core.node import ProtocolConfig
+    from repro.core.sim import Cluster, NetConfig, completion_tuples, workload
+    from repro.obs import FlightRecorder
+
+    def run(mode):
+        cl = Cluster(ProtocolConfig(n_machines=5,
+                                    sessions_per_machine=sessions,
+                                    all_aboard=True),
+                     NetConfig(seed=seed, min_delay=1.5, max_delay=1.5))
+        if mode is not None:
+            cl.attach_obs(FlightRecorder(mode=mode))
+        workload(cl, n_ops=n_ops, keys=keys, seed=seed,
+                 rmw_frac=0.4, write_frac=0.3)
+        t0 = time.time()
+        if not cl.run_until_quiet(max_ticks=200_000):
+            raise RuntimeError(f"obs_overhead run (tracing={mode}) stuck")
+        return time.time() - t0, cl
+
+    rows, ref, base = [], None, None
+    for label, mode in (("off", None), ("sampled", "sampled"),
+                        ("full", "full")):
+        best, cl = min((run(mode) for _ in range(repeats)),
+                       key=lambda r: r[0])
+        comps = completion_tuples(cl)
+        if ref is None:
+            ref = comps
+        elif comps != ref:
+            raise RuntimeError(
+                f"tracing={label} changed the completion history")
+        row = {"tracing": label, "completed": len(cl.history),
+               "client_ops_per_s": round(len(cl.history) / best),
+               "wall_s": round(best, 3)}
+        if base is None:
+            base = row["client_ops_per_s"]
+        else:
+            row["vs_off"] = round(row["client_ops_per_s"] / max(base, 1), 3)
+        rows.append(row)
+    return rows
+
+
 def bench_reconfig(n_ops: int = 36, keys: int = 6, seed: int = 7,
                    sessions: int = 4):
     """Client ops/s during a live view change vs steady state.
@@ -513,6 +566,7 @@ def main(argv=None):
             "issuer": [bench_issuer(n, iters=10)],
             "e2e": bench_e2e(),
             "reconfig": bench_reconfig(),
+            "obs_overhead": bench_obs_overhead(),
         }
         if args.shards > 1:
             rows["e2e_sharded"] = bench_e2e(shards=args.shards)

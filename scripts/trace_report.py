@@ -1,0 +1,50 @@
+#!/usr/bin/env python
+"""Summarize a flight-recorder JSONL dump (repro.obs postmortems).
+
+Reads the dump written by ``repro.obs.dump_jsonl`` / ``dump_all`` — the
+file a failed smoke or checker leaves behind (CI uploads them as
+artifacts) — and prints what the run's protocol traffic actually did:
+
+* path mix (ABD read/write, all-aboard fast, CP slow) from the *exact*
+  registry counters,
+* the fast-path hit rate (the paper's §9 claim in one number),
+* per-path latency percentiles over the recorded spans (virtual ticks),
+* the top contended keys (retries + steals + helps),
+* network fault accounting.
+
+Usage::
+
+    python scripts/trace_report.py dumps/flight.jsonl
+    python scripts/trace_report.py --json dumps/flight.jsonl   # machine-readable
+
+See ``docs/observability.md`` for the dump format and the metric catalog.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.obs.report import render_summary, summarize_file  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("dump", help="flight-recorder JSONL dump")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the summary as JSON instead of text")
+    args = ap.parse_args(argv)
+    summary = summarize_file(args.dump)
+    if args.json:
+        print(json.dumps(summary, indent=1, sort_keys=True))
+    else:
+        print(render_summary(summary))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -189,6 +189,15 @@ class Machine:
         # pauses — see repro.core.proposer): the input+oracle of the
         # differential *proposer* replay (repro.core.replay).
         self.issuer_trace: Optional[List[object]] = None
+        # observability tap (repro.obs.FlightRecorder): None = off, zero
+        # cost beyond these `is not None` branches.  Per-session open
+        # spans live here (LocalEntry/AbdEntry objects are replaced per
+        # op, so the span rides the machine, keyed by session).
+        self.obs = None
+        self._obs_rmw: List[Optional[object]] = (
+            [None] * cfg.sessions_per_machine)
+        self._obs_abd: List[Optional[object]] = (
+            [None] * cfg.sessions_per_machine)
 
     # -- infrastructure ------------------------------------------------------
 
@@ -284,6 +293,11 @@ class Machine:
     def crash(self) -> None:
         self.alive = False
         self.inbox.clear()
+        if self.obs is not None:
+            self.obs.machine_crash(self.mid, self._now(),
+                                   self._obs_rmw + self._obs_abd)
+            self._obs_rmw = [None] * self.cfg.sessions_per_machine
+            self._obs_abd = [None] * self.cfg.sessions_per_machine
 
     # -- live reconfiguration: epoch fencing + view install --------------------
     #
@@ -571,6 +585,9 @@ class Machine:
             fresh.tag = req.tag
             self.entries[sess] = fresh
             self.bump("rmw_started")
+            if self.obs is not None:
+                self._obs_rmw[sess] = self.obs.op_begin(
+                    self.mid, sess, "rmw", req.key, req.tag, self._now())
             self._try_grab(fresh, first_attempt=True)
         elif req.kind == ReqKind.WRITE:
             self._start_write(sess, req)
@@ -633,6 +650,8 @@ class Machine:
             kv.proposed_ts = le.ts
             kv.rmw_id = le.rmw_id
             self.bump("steals")
+            if self.obs is not None:
+                self.obs.rmw_steal(self._obs_rmw[le.sess], self._now())
             self._bcast_proposes(le, local_ack=True)
         else:
             # Accepted entries can NEVER be stolen — help them (§5/§6):
@@ -643,6 +662,9 @@ class Machine:
             kv.proposed_ts = le.ts
             le.helping_flag = HelpFlag.PROPOSE_LOCALLY_ACCEPTED
             self.bump("help_after_wait")
+            if self.obs is not None:
+                self.obs.rmw_help(self._obs_rmw[le.sess], self._now(),
+                                  "help_after_wait")
             self._bcast_proposes(le, local_ack=False)
             self._note_local(le, Reply(MsgKind.PROP_REPLY, self.mid,
                                        Rep.SEEN_LOWER_ACC, le.lid, key=le.key,
@@ -691,6 +713,10 @@ class Machine:
             self.issuer_trace.append(ev)
 
     def _bcast_proposes(self, le: LocalEntry, local_ack: bool) -> None:
+        if self.obs is not None:
+            # a propose round means the op is on the classic CP machinery:
+            # the §9 fast path never proposes
+            self.obs.rmw_classic(self._obs_rmw[le.sess], self._now())
         le.state = LEState.PROPOSED
         le.lid = self._new_lid(le.sess)
         le.round_age = 0
@@ -720,6 +746,8 @@ class Machine:
         self._compute_accept_values(le, kv)
         le.all_aboard_timeout_counter = 0
         self.bump("all_aboard_attempts")
+        if self.obs is not None:
+            self.obs.rmw_aboard(self._obs_rmw[le.sess], self._now())
         self._bcast_accepts(le, value=le.accepted_value, rmw_id=le.rmw_id,
                             base_ts=le.base_ts, aboard=True)
 
@@ -800,6 +828,8 @@ class Machine:
         kv.acc_base_ts = h.base_ts
         kv.rmw_id = h.rmw_id
         self.bump("helps")
+        if self.obs is not None:
+            self.obs.rmw_help(self._obs_rmw[le.sess], self._now())
         self._bcast_accepts(le, value=h.value, rmw_id=h.rmw_id,
                             base_ts=h.base_ts)
         return True
@@ -963,6 +993,9 @@ class Machine:
                                        t.seen_higher.version + 1)
             if le.all_aboard:
                 self.bump("all_aboard_fallbacks")
+                if self.obs is not None:
+                    self.obs.op_event(self._obs_rmw[le.sess], self._now(),
+                                      "all_aboard_fallback")
             self._enter_retry(le)
 
     def _apply_commit_bcast(self, le: LocalEntry, helping: bool) -> None:
@@ -1000,6 +1033,10 @@ class Machine:
         self._record_commit(le.key, le.accepted_log_no, le.rmw_id,
                             le.accepted_value, le.base_ts, kv)
         self.bump("learned_committed")
+        if self.obs is not None:
+            # helped to completion: by definition not the §9 fast path
+            self.obs.rmw_classic(self._obs_rmw[le.sess], self._now(),
+                                 "learned_committed")
         if no_bcast:
             self._complete_rmw(le)
         else:
@@ -1044,6 +1081,8 @@ class Machine:
         full round uncontended.
         """
         self._trace_pause(le.sess)
+        if self.obs is not None:
+            self.obs.rmw_retry(self._obs_rmw[le.sess], self._now())
         le.state = LEState.RETRY_WITH_HIGHER_TS
         le.round_age = 0
         le.retry_count += 1
@@ -1165,6 +1204,9 @@ class Machine:
                           rmw_id=le.rmw_id)
         self.completions.append((le.sess, comp))
         self.entries[le.sess] = LocalEntry(sess=le.sess, gsess=le.gsess)
+        if self.obs is not None:
+            self.obs.rmw_end(self._obs_rmw[le.sess], self._now())
+            self._obs_rmw[le.sess] = None
 
     # -- inspection (worker loop step 2) ----------------------------------------------
 
@@ -1184,12 +1226,17 @@ class Machine:
         elif le.state in (LEState.PROPOSED, LEState.ACCEPTED,
                           LEState.COMMITTED):
             le.round_age += 1
+            if self.obs is not None:
+                self.obs.quorum_wait(self._obs_rmw[le.sess])
             if le.state == LEState.ACCEPTED and le.all_aboard:
                 le.all_aboard_timeout_counter += 1
                 if (le.all_aboard_timeout_counter
                         >= self.cfg.all_aboard_timeout):
                     # §9.2: don't wait forever for the last ack — run CP.
                     self.bump("all_aboard_timeouts")
+                    if self.obs is not None:
+                        self.obs.op_event(self._obs_rmw[le.sess],
+                                          self._now(), "all_aboard_timeout")
                     self._enter_retry(le)
                     return
             if le.round_age >= self.cfg.retransmit_threshold:
@@ -1240,6 +1287,9 @@ class Machine:
         ab.max_base = kv.base_ts
         ab.repliers = {self.mid}                     # local reply
         self.bump("writes_started")
+        if self.obs is not None:
+            self._obs_abd[sess] = self.obs.op_begin(
+                self.mid, sess, "write", req.key, req.tag, self._now())
         self._trace_abd_round(ab, rep_bits=1 << self.mid)
         self._broadcast(Msg(MsgKind.WRITE_QUERY, self.mid, key=req.key,
                             lid=ab.lid))
@@ -1259,6 +1309,9 @@ class Machine:
         ab.repliers = {self.mid}
         ab.storers = {self.mid}                      # we store it ourselves
         self.bump("reads_started")
+        if self.obs is not None:
+            self._obs_abd[sess] = self.obs.op_begin(
+                self.mid, sess, "read", req.key, req.tag, self._now())
         self._trace_abd_round(ab, rep_bits=1 << self.mid,
                               store_bits=1 << self.mid)
         self._broadcast(Msg(MsgKind.READ_QUERY, self.mid, key=req.key,
@@ -1299,6 +1352,9 @@ class Machine:
             self._complete_abd(ab, ReqKind.READ, ab.best_value, ab.best_cs)
 
     def _write_phase2(self, ab: AbdEntry) -> None:
+        if self.obs is not None:
+            self.obs.op_event(self._obs_abd[ab.sess], self._now(),
+                              "write_phase2")
         ab.phase = AbdPhase.W_WRITE
         ab.ackers = set()
         ab.lid = self._new_lid(ab.sess)
@@ -1320,6 +1376,9 @@ class Machine:
         ab.ackers = set()
         ab.lid = self._new_lid(ab.sess)
         self.bump("read_write_backs")
+        if self.obs is not None:
+            self.obs.op_event(self._obs_abd[ab.sess], self._now(),
+                              "read_write_back")
         self._trace_abd_round(ab)
         kv = get_kv(self.kvs, ab.key)
         msg = Msg(MsgKind.READ_COMMIT, self.mid, key=ab.key,
@@ -1340,6 +1399,9 @@ class Machine:
             (ab.sess, Completion(tag=ab.tag, kind=kind, key=ab.key,
                                  value=value, carstamp=cs)))
         ab.phase = AbdPhase.IDLE
+        if self.obs is not None:
+            self.obs.abd_end(self._obs_abd[ab.sess], self._now())
+            self._obs_abd[ab.sess] = None
 
     def _inspect_abd(self, ab: AbdEntry) -> None:
         """Liveness: retransmit the *current phase's* message verbatim.
@@ -1351,10 +1413,15 @@ class Machine:
         the same lid/TS is idempotent at every receiver.
         """
         ab.round_age += 1
+        if self.obs is not None:
+            self.obs.quorum_wait(self._obs_abd[ab.sess])
         if ab.round_age < self.cfg.retransmit_threshold:
             return
         ab.round_age = 0
         self.bump("abd_retransmits")
+        if self.obs is not None:
+            self.obs.op_event(self._obs_abd[ab.sess], self._now(),
+                              "abd_retransmit")
         if ab.phase == AbdPhase.W_QUERY:
             self._broadcast(Msg(MsgKind.WRITE_QUERY, self.mid, key=ab.key,
                                 lid=ab.lid))

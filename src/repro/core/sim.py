@@ -63,8 +63,16 @@ class Network:
         # the active view's member set (Cluster keeps it in sync): messages
         # addressed outside it are dropped like any unreachable destination
         self.members: set = set(range(n))
+        # fault accounting: ``dropped`` is the umbrella (every message
+        # that left the heap — or never entered it — without reaching an
+        # inbox); ``removed_dst``/``crashed_dst`` attribute the delivery-
+        # time drop causes; ``duplicated``/``heavy_tail`` count the fault
+        # model's extra-copy and straggler-delay draws.  Conservation
+        # (:meth:`conservation`): sent + duplicated ==
+        # delivered + dropped + pending.
         self.stats = {"sent": 0, "dropped": 0, "duplicated": 0,
-                      "delivered": 0, "removed_dst": 0}
+                      "delivered": 0, "removed_dst": 0, "crashed_dst": 0,
+                      "heavy_tail": 0}
 
     def partition(self, group_a: Sequence[int], group_b: Sequence[int]) -> None:
         for a in group_a:
@@ -89,6 +97,7 @@ class Network:
             delay = self.rng.uniform(self.cfg.min_delay, self.cfg.max_delay)
             if self.rng.random() < self.cfg.heavy_tail_prob:
                 delay += self.rng.uniform(0.0, self.cfg.heavy_tail_extra)
+                self.stats["heavy_tail"] += 1
             heapq.heappush(self.heap,
                            (self.now + delay, next(self._seq), dst, payload))
 
@@ -119,6 +128,7 @@ class Network:
                 continue
             if not machines[dst].alive:
                 self.stats["dropped"] += 1
+                self.stats["crashed_dst"] += 1
                 continue
             machines[dst].deliver(payload)
             delivered += 1
@@ -128,6 +138,21 @@ class Network:
 
     def pending(self) -> int:
         return len(self.heap)
+
+    def conservation(self) -> Dict[str, int]:
+        """Message conservation terms: every sent message (plus every
+        duplicate copy the fault model minted) is exactly one of
+        delivered, dropped, or still in flight.  ``balance`` is 0 iff the
+        books square — asserted at quiescence by ``tests/test_faults.py``.
+        """
+        s = self.stats
+        return {
+            "sent": s["sent"], "duplicated": s["duplicated"],
+            "delivered": s["delivered"], "dropped": s["dropped"],
+            "in_flight": len(self.heap),
+            "balance": (s["sent"] + s["duplicated"]
+                        - s["delivered"] - s["dropped"] - len(self.heap)),
+        }
 
 
 class Cluster:
@@ -183,6 +208,16 @@ class Cluster:
         for m in self.machines:
             if m.issuer_trace is None:
                 m.issuer_trace = []
+
+    def attach_obs(self, recorder) -> "Cluster":
+        """Wire a :class:`repro.obs.FlightRecorder` through the cluster
+        (every machine, the network, the fused engine).  Duck-typed so
+        core carries no obs import; survives :meth:`restart` /
+        :meth:`add_machine` via the ``obs`` carry-over there.  Attach
+        before submitting work — the recorder's path counters reconcile
+        with the completion history only for ops it saw start."""
+        recorder.attach(self)
+        return self
 
     # -- client API ----------------------------------------------------------
 
@@ -271,6 +306,11 @@ class Cluster:
             fresh.msg_trace = []
         if traced_issuer:
             fresh.issuer_trace = []
+        obs = (old.obs if old is not None
+               else next((m.obs for m in self.machines
+                          if m.obs is not None), None))
+        if obs is not None:
+            obs.adopt(fresh)
         if syncing:
             fresh.begin_catchup()
         while len(self.machines) <= mid:
@@ -321,6 +361,8 @@ class Cluster:
         fresh.write_log = old.write_log
         fresh.msg_trace = old.msg_trace
         fresh.issuer_trace = old.issuer_trace
+        if old.obs is not None:
+            old.obs.adopt(fresh)
         if fresh.issuer_trace is not None:
             # volatile issuer state (sessions, tallies) died with the old
             # incarnation: park every lane so the proposer replay drops

@@ -197,10 +197,13 @@ class OpenLoopHarness:
     through it, faults and all."""
 
     def __init__(self, spec: OpenLoopSpec, machine_cls: type = Machine,
-                 faults: Optional[FaultPlan] = None):
+                 faults: Optional[FaultPlan] = None, obs=None):
         self.spec = spec
         self.machine_cls = machine_cls
         self.faults = faults or FaultPlan()
+        # optional repro.obs.FlightRecorder, attached to the cluster
+        # before any traffic so path counters reconcile with completions
+        self.obs = obs
         # The whole op sequence is precomputed from dedicated seeded
         # streams (arrival times, keys, classes/values, routing): pure in
         # the spec, identical across machine implementations.
@@ -271,6 +274,8 @@ class OpenLoopHarness:
         spec = self.spec
         cluster = Cluster(spec.protocol_config(), spec.net_config(),
                           machine_cls=self.machine_cls)
+        if self.obs is not None:
+            cluster.attach_obs(self.obs)
         recorder = LatencyRecorder(self.faults.windows,
                                    sub_bits=spec.sub_bits)
         gauges = GaugeLog()
@@ -345,5 +350,11 @@ class OpenLoopHarness:
             load_ticks=load_ticks, offered_by_class=offered_by_class)
         if check:
             from repro.core import checkers
-            checkers.check_all(cluster)
+            try:
+                checkers.check_all(cluster)
+            except checkers.SafetyViolation as exc:
+                if self.obs is not None:
+                    self.obs.note("checker_failure", cluster.network.now,
+                                  error=str(exc))
+                raise
         return result

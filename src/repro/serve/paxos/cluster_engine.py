@@ -172,6 +172,10 @@ class PlaneStack:
         self.dev: Optional[jnp.ndarray] = None
         self.shard_dirty = np.ones(self.n_shards, dtype=bool)
         self.dev_fresh = False
+        # coherence telemetry: device uploads taken (dirty-plane syncs)
+        # and row evict/reloads — surfaced via ClusterEngine.telemetry()
+        self.syncs = 0
+        self.reloads = 0
         self._mesh: Optional[Mesh] = None
         self._sharding: Optional[NamedSharding] = None
         self._sharding_shape: Optional[Tuple[int, ...]] = None
@@ -295,6 +299,7 @@ class PlaneStack:
         self.pull()
         src.pull()
         self.host_dirty = True
+        self.reloads += 1
         length = src.n_lanes
         if self.n_shards > 1 and length == self.n_lanes:
             sm = self.shard_map
@@ -320,6 +325,7 @@ class PlaneStack:
             else:
                 self.dev = jnp.asarray(self.host)
             self.host_dirty = False
+            self.syncs += 1
         return self.dev
 
     def absorb(self, dev_out: jnp.ndarray) -> None:
@@ -503,6 +509,20 @@ class ClusterEngine:
                       "receiver_shard_lanes": [0] * self.shards,
                       "issuer_shard_lanes": [0] * self.tab_shards,
                       "shard_registrations": [0] * self.shards}
+
+    # -- telemetry -----------------------------------------------------------
+
+    def telemetry(self) -> Dict[str, object]:
+        """``stats`` plus the plane-coherence counters that live on the
+        stacks themselves: dirty-plane re-uploads (``plane_syncs``, split
+        per stack) and row evict/reloads (crash/restart + view installs).
+        The flight recorder pulls this at snapshot time."""
+        t = dict(self.stats)
+        t["kv_plane_syncs"] = self.kv.syncs
+        t["tab_plane_syncs"] = self.tab.syncs
+        t["plane_syncs"] = self.kv.syncs + self.tab.syncs
+        t["row_reloads"] = self.kv.reloads + self.tab.reloads
+        return t
 
     # -- shard steering ------------------------------------------------------
 

@@ -44,7 +44,10 @@ gauges` reports ``queue_depth`` (items pending), ``keys_backlogged``
 faces) and ``oldest_age`` (how many admissions ago the oldest pending item
 arrived — the scheduler-aging signal the fairness mode bounds).  An
 optional :attr:`~IngestScheduler.gauge_hook` fires with that snapshot after
-every emitted batch for in-situ sampling.  :meth:`IngestScheduler.reset`
+every emitted batch for in-situ sampling, and
+:meth:`IngestScheduler.bind_metrics` re-homes the same snapshot onto a
+:class:`repro.obs.MetricsRegistry` so the whole stack shares one gauge
+surface (``docs/observability.md``).  :meth:`IngestScheduler.reset`
 clears all queued state (crash-stop semantics: a machine's staged ingest
 dies with its inbox) while the cumulative ``stats`` counters survive — see
 ``BatchedMachine.crash``.
@@ -115,6 +118,11 @@ class IngestScheduler:
                       "conflict_deferrals": 0}
         # observer called with gauges() after every emitted batch
         self.gauge_hook: Optional[Callable[[Dict[str, int]], None]] = None
+        # the unified gauge surface (repro.obs.MetricsRegistry): when
+        # bound, every emitted batch publishes the same snapshot the
+        # gauge_hook sees — see bind_metrics()
+        self._metrics = None
+        self._metrics_prefix = "ingest"
 
     # -- ingest ---------------------------------------------------------------
 
@@ -145,28 +153,40 @@ class IngestScheduler:
         the admit loop: attribute loads become locals, and the sequence /
         pending / stats counters update once per run instead of once per
         item (the ~50 µs/item host-path shave — see
-        ``benchmarks/bench_protocol.py`` ``host_path`` lane)."""
+        ``benchmarks/bench_protocol.py`` ``host_path`` lane).
+
+        Exception-safe: if the iterable (or ``key_of``) raises mid-run,
+        the items admitted so far are committed consistently.  Without
+        the ``finally`` the hoisted counters never landed, so the *next*
+        admissions reused the same sequence numbers — and a stale heap
+        entry for a long-dead key could then alias a live head's seq,
+        making :meth:`gauges` report the dead key's ``oldest_age`` (and
+        ``queue_depth`` drift negative).  See
+        ``tests/test_scheduler.py::test_offer_many_partial_failure``.
+        """
         queues = self._queues
         heads = self._heads
         lane = self._lane
         seq = self._seq
         n = 0
         newly = 0
-        for item in items:
-            key = lane(item)
-            q = queues.get(key)
-            if q is None:
-                q = queues[key] = deque()
-            if not q:
-                heapq.heappush(heads, (seq, key))
-                newly += 1
-            q.append((seq, item))
-            seq += 1
-            n += 1
-        self._seq = seq
-        self._pending += n
-        self._backlogged += newly
-        self.stats["offered"] += n
+        try:
+            for item in items:
+                key = lane(item)
+                q = queues.get(key)
+                if q is None:
+                    q = queues[key] = deque()
+                if not q:
+                    heapq.heappush(heads, (seq, key))
+                    newly += 1
+                q.append((seq, item))
+                seq += 1
+                n += 1
+        finally:
+            self._seq = seq
+            self._pending += n
+            self._backlogged += newly
+            self.stats["offered"] += n
 
     def pending(self) -> int:
         return self._pending
@@ -177,7 +197,14 @@ class IngestScheduler:
         """Live queue gauges: ``queue_depth`` (pending items),
         ``keys_backlogged`` (keys with a non-empty queue) and
         ``oldest_age`` (admissions since the oldest pending item arrived
-        — 0 when idle).  O(stale heap entries), usually O(1)."""
+        — 0 when idle).  O(stale heap entries), usually O(1).
+
+        The lazy cleanup is sound because dead keys leave no trace: an
+        emptied queue is deleted from ``_queues`` (see :meth:`_pop`) and
+        sequence numbers are never reused (see :meth:`offer_many`), so a
+        heap top is live **iff** its key still has a queue whose head
+        carries exactly that seq.
+        """
         heads = self._heads
         # lazily discard stale heap entries so the age reading is live
         while heads:
@@ -190,6 +217,16 @@ class IngestScheduler:
         return {"queue_depth": self._pending,
                 "keys_backlogged": self._backlogged,
                 "oldest_age": oldest}
+
+    def bind_metrics(self, registry, prefix: str = "ingest") -> None:
+        """Re-home the gauge surface onto a
+        :class:`repro.obs.MetricsRegistry`: every emitted batch publishes
+        ``<prefix>.queue_depth`` / ``keys_backlogged`` / ``oldest_age``
+        gauges plus a ``<prefix>.batch_lanes`` occupancy histogram there
+        — the same snapshot any ``gauge_hook`` observer receives, so
+        there is exactly one gauge surface regardless of consumer."""
+        self._metrics = registry
+        self._metrics_prefix = prefix
 
     def reset(self) -> None:
         """Drop all queued state — crash-stop hygiene.
@@ -215,6 +252,11 @@ class IngestScheduler:
         if q:
             heapq.heappush(self._heads, (q[0][0], key))
         else:
+            # dead key: drop the deque entirely.  Keeping empty deques
+            # around leaked one per key ever seen (unbounded under key
+            # churn) and was the only reason a stale heap entry could
+            # still resolve a dead key at all.
+            del self._queues[key]
             self._backlogged -= 1
         self._pending -= 1
         return item
@@ -254,39 +296,58 @@ class IngestScheduler:
         lps = None if shard_map is None else shard_map.lanes_per_shard
         state = _ConflictState()
         deferred: List = []
-        while self._heads:
-            if (self.batch_target is not None
-                    and len(batch) >= self.batch_target):
-                break
-            seq, key = heapq.heappop(self._heads)
-            q = self._queues.get(key)
-            if not q or q[0][0] != seq:
-                continue                       # stale heap entry
-            item = q[0][1]
-            msg = item if isinstance(item, Msg) else None
-            if state.conflicts(key, msg):
-                self.stats["conflict_deferrals"] += 1
-                if self.strict_order:
+        try:
+            while self._heads:
+                if (self.batch_target is not None
+                        and len(batch) >= self.batch_target):
+                    break
+                seq, key = heapq.heappop(self._heads)
+                q = self._queues.get(key)
+                if not q or q[0][0] != seq:
+                    continue                   # stale heap entry
+                if lps is not None and not 0 <= key < shard_map.n_lanes:
+                    # caller error — restore the live head before raising
+                    # so the scheduler stays consistent (nothing queued
+                    # for *other* keys may be lost to a bad shard map)
                     heapq.heappush(self._heads, (seq, key))
-                    break                      # nothing may overtake it
-                deferred.append((seq, key))
-                continue
-            state.admit(key, msg)
-            item = self._pop(key)
-            batch.append(item)
-            if lps is not None:
-                if not 0 <= key < shard_map.n_lanes:
                     raise ValueError(
                         f"key {key} outside the sharded lane axis "
                         f"[0, {shard_map.n_lanes})")
-                shards[key // lps].append(item)
-        for entry in deferred:
-            heapq.heappush(self._heads, entry)
+                item = q[0][1]
+                msg = item if isinstance(item, Msg) else None
+                if state.conflicts(key, msg):
+                    self.stats["conflict_deferrals"] += 1
+                    if self.strict_order:
+                        heapq.heappush(self._heads, (seq, key))
+                        break                  # nothing may overtake it
+                    deferred.append((seq, key))
+                    continue
+                state.admit(key, msg)
+                item = self._pop(key)
+                batch.append(item)
+                if lps is not None:
+                    shards[key // lps].append(item)
+        finally:
+            # also on the error path: deferred heads are live entries —
+            # dropping them would strand their queues forever
+            for entry in deferred:
+                heapq.heappush(self._heads, entry)
         if batch:
             self.stats["batches"] += 1
             self.stats["emitted"] += len(batch)
-            if self.gauge_hook is not None:
-                self.gauge_hook(self.gauges())
+            if self._metrics is not None or self.gauge_hook is not None:
+                g = self.gauges()
+                if self._metrics is not None:
+                    mp = self._metrics_prefix
+                    self._metrics.set_gauge(mp + ".queue_depth",
+                                            g["queue_depth"])
+                    self._metrics.set_gauge(mp + ".keys_backlogged",
+                                            g["keys_backlogged"])
+                    self._metrics.set_gauge(mp + ".oldest_age",
+                                            g["oldest_age"])
+                    self._metrics.observe(mp + ".batch_lanes", len(batch))
+                if self.gauge_hook is not None:
+                    self.gauge_hook(g)
         return batch, shards
 
     def drain(self) -> Iterator[List[object]]:

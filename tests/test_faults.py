@@ -38,6 +38,11 @@ def test_linearizable_under_faults(seed, drop, dup, tail):
     if drop + dup > 0:   # heavy-tail-only profiles delay but never drop/dup
         assert (cl.network.stats["dropped"]
                 + cl.network.stats["duplicated"]) > 0
+    # conservation at quiescence: every sent message (plus every dup copy
+    # minted) is exactly one of delivered / dropped / in flight
+    cons = cl.network.conservation()
+    assert cons["in_flight"] == 0
+    assert cons["balance"] == 0
 
 
 def test_linearizable_under_faults_all_aboard():
@@ -50,3 +55,50 @@ def test_linearizable_under_faults_all_aboard():
     assert cl.run_until_quiet(max_ticks=160_000)
     checkers.check_all(cl)
     assert len(cl.history) == 50
+    assert cl.network.conservation()["balance"] == 0
+
+
+def test_fault_accounting_attributes_drop_causes():
+    """Crash with messages in flight: the delivery-time drops are
+    attributed to ``crashed_dst``, the drop umbrella covers every cause,
+    and the books still square at quiescence."""
+    cfg = ProtocolConfig(n_machines=5, sessions_per_machine=2)
+    net = NetConfig(seed=23, drop_prob=0.04, dup_prob=0.06,
+                    heavy_tail_prob=0.03, heavy_tail_extra=25.0)
+    cl = Cluster(cfg, net)
+    workload(cl, n_ops=40, keys=3, seed=23, rmw_frac=0.5, write_frac=0.25)
+    cl.step(8)
+    # land the crash with traffic addressed to the victim still in flight
+    cl.crash(4)
+    cl.step(10)
+    cl.restart(4)
+    assert cl.run_until_quiet(max_ticks=160_000)
+    checkers.check_all(cl)
+    s = cl.network.stats
+    assert s["crashed_dst"] > 0, "no in-flight message hit the dead machine"
+    assert s["duplicated"] > 0 and s["heavy_tail"] > 0
+    # attributed causes never exceed the umbrella count
+    assert s["removed_dst"] + s["crashed_dst"] <= s["dropped"]
+    cons = cl.network.conservation()
+    assert cons["in_flight"] == 0
+    assert cons["balance"] == 0
+
+
+def test_fault_accounting_lands_in_registry():
+    """The registry view of the network is the raw stats dict verbatim:
+    ``net.*`` counters in a flight-recorder snapshot equal
+    ``Network.stats`` at snapshot time (one accounting surface)."""
+    from repro.obs import FlightRecorder
+
+    cfg = ProtocolConfig(n_machines=3, sessions_per_machine=2)
+    net = NetConfig(seed=11, drop_prob=0.08, dup_prob=0.08,
+                    heavy_tail_prob=0.05, heavy_tail_extra=20.0)
+    cl = Cluster(cfg, net)
+    rec = FlightRecorder(mode="off")             # counters stay exact
+    cl.attach_obs(rec)
+    workload(cl, n_ops=30, keys=2, seed=11, rmw_frac=0.5, write_frac=0.25)
+    assert cl.run_until_quiet(max_ticks=160_000)
+    counters = rec.snapshot()["counters"]
+    for k, v in cl.network.stats.items():
+        assert counters["net." + k] == v
+    assert cl.network.conservation()["balance"] == 0

@@ -267,6 +267,151 @@ def test_reset_clears_state_keeps_stats():
     assert [m.key for b in sched.drain() for m in b] == [5]
 
 
+def test_offer_many_partial_failure():
+    """Regression: ``offer_many`` dying mid-iteration must commit the
+    admitted prefix.  The old code left ``_seq`` (and the pending /
+    backlog counters) unbumped on the error path, so the *next*
+    admissions reused sequence numbers — and a stale heap entry for a
+    long-dead key could alias a live head's seq, making :meth:`gauges`
+    report the dead key's ``oldest_age`` and drift ``queue_depth``
+    negative under key churn."""
+    def boom_key(item):
+        if item == "boom":
+            raise RuntimeError("boom")
+        return item[0]
+
+    sched = IngestScheduler(key_of=boom_key)
+    sched.offer(("a", "x"))                       # seq 0
+    with pytest.raises(RuntimeError):
+        sched.offer_many([("b", "y"), ("a", "z"), "boom", ("c", "!")])
+    # the two items admitted before the failure are committed
+    assert sched.gauges() == {"queue_depth": 3, "keys_backlogged": 2,
+                              "oldest_age": 3}
+    # their sequence numbers are burned: no later admission can alias them
+    assert sched._seq == 3
+    sched.offer(("c", "w"))                       # fresh seq 3, not a reuse
+    assert sched.gauges()["queue_depth"] == 4
+    drained = [it for b in sched.drain() for it in b]
+    assert sorted(drained) == [("a", "x"), ("a", "z"), ("b", "y"),
+                               ("c", "w")]
+    assert sched.gauges() == {"queue_depth": 0, "keys_backlogged": 0,
+                              "oldest_age": 0}
+
+
+def test_dead_keys_do_not_leak_queues():
+    """Regression: an emptied per-key deque is deleted, not kept — under
+    key churn the old behavior leaked one empty deque per key ever seen
+    (and those corpses were what stale heap entries resolved against)."""
+    sched = IngestScheduler(key_of=lambda item: item)
+    for key in range(1000):
+        sched.offer(key)
+        assert [b for b in sched.drain()] == [[key]]
+    assert len(sched._queues) == 0
+    assert sched._heads == []
+    assert sched.gauges() == {"queue_depth": 0, "keys_backlogged": 0,
+                              "oldest_age": 0}
+
+
+def test_emit_sharded_bad_key_keeps_deferred_heads():
+    """Regression: a key outside the sharded lane axis raises, but the
+    heads already deferred by the conflict scan this pass must survive —
+    dropping them stranded their queues forever."""
+    from repro.core.lanes import ShardMap
+
+    sched = IngestScheduler()                     # aging mode: defers
+    sched.offer(propose(1))
+    sched.offer(propose(1))                       # conflicts -> deferred
+    sched.offer(propose(200))                     # outside the lane axis
+    with pytest.raises(ValueError):
+        sched.emit_sharded(ShardMap(n_shards=2, n_lanes=8))
+    # one item (key 1 head) was admitted before the raise; everything
+    # else — the deferred second key-1 item and the bad-key item — must
+    # still drain
+    remaining = [m.key for b in sched.drain() for m in b]
+    assert sorted(remaining) == [1, 200]
+    assert sched.gauges() == {"queue_depth": 0, "keys_backlogged": 0,
+                              "oldest_age": 0}
+
+
+def test_gauges_match_oracle_under_key_churn():
+    """Deterministic churn fuzz: a sliding key window (constant key
+    birth/death), mid-iteration offer_many failures and interleaved
+    emission, checked against a straight-line oracle after every step.
+    This is the workload that exposed the stale-heap aliasing."""
+    import random
+
+    rng = random.Random(0xA5)
+    sched = IngestScheduler(key_of=lambda item: item[0])
+    model = {}                   # key -> seqs, mirroring the live queues
+    seq = 0
+    base = 0
+
+    def admit(key):
+        nonlocal seq
+        item = (key, seq)
+        model.setdefault(key, []).append(seq)
+        seq += 1
+        return item
+
+    def retire(item):
+        key, s = item
+        model[key].remove(s)
+        if not model[key]:
+            del model[key]
+
+    for _step in range(1500):
+        r = rng.random()
+        if r < 0.45:
+            if rng.random() < 0.3:
+                base += 1                        # slide the key window
+            sched.offer(admit(base + rng.randrange(6)))
+        elif r < 0.60:
+            def gen(n_ok):
+                for _ in range(n_ok):
+                    yield admit(base + rng.randrange(6))
+                raise RuntimeError("mid-iteration failure")
+            with pytest.raises(RuntimeError):
+                sched.offer_many(gen(rng.randrange(4)))
+        elif r < 0.90:
+            for item in sched.emit():
+                retire(item)
+        else:
+            for batch in sched.drain():
+                for item in batch:
+                    retire(item)
+        depth = sum(len(v) for v in model.values())
+        oldest = ((seq - min(s for v in model.values() for s in v))
+                  if model else 0)
+        assert sched.gauges() == {"queue_depth": depth,
+                                  "keys_backlogged": len(model),
+                                  "oldest_age": oldest}
+    assert len(sched._queues) == len(model)
+
+
+def test_bind_metrics_one_gauge_surface():
+    """bind_metrics re-homes the gauge surface onto a MetricsRegistry:
+    the registry and any gauge_hook observer see the same snapshot."""
+    from repro.obs import MetricsRegistry
+
+    reg = MetricsRegistry()
+    sched = IngestScheduler(strict_order=True)
+    sched.bind_metrics(reg, "ingest.m7")
+    seen = []
+    sched.gauge_hook = seen.append
+    for _ in range(3):
+        sched.offer(propose(0))                   # conflicts: three batches
+    sched.offer(propose(1))
+    for _ in sched.drain():
+        pass
+    assert len(seen) == sched.stats["batches"]
+    last = seen[-1]
+    assert reg.gauge("ingest.m7.queue_depth") == last["queue_depth"] == 0
+    assert reg.gauge("ingest.m7.keys_backlogged") == last["keys_backlogged"]
+    assert reg.gauge("ingest.m7.oldest_age") == last["oldest_age"]
+    hist = reg.snapshot()["histograms"]["ingest.m7.batch_lanes"]
+    assert hist["count"] == sched.stats["batches"]
+
+
 def test_batched_machine_crash_resets_ingest():
     """Mid-batch crash: staged ingest dies with the inbox, and the dead
     machine's scheduler reports empty gauges to observers."""
